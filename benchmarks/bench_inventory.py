@@ -1,0 +1,37 @@
+"""Paper Table 4 analog — implementation inventory.  The FPGA table reports
+LUT/BRAM/DSP per module; the TPU-framework analog reports, per assigned
+architecture: parameter count, active parameters, per-train-step MODEL_FLOPs,
+and the checkpoint footprint — the resources the pod actually provisions.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import row
+from repro.configs import SHAPES, get_config, list_archs
+from repro.launch.cells import active_param_count, model_flops_for
+from repro.models import LM
+from repro.models.spec import abstract_params
+
+
+def run() -> list[str]:
+    rows = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        specs = LM(cfg).specs()
+        pa = abstract_params(specs)
+        n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(pa))
+        n_act = active_param_count(cfg, pa)
+        byts = sum(int(np.prod(x.shape)) * x.dtype.itemsize for x in jax.tree.leaves(pa))
+        mf = model_flops_for(cfg, SHAPES["train_4k"], pa)
+        rows.append(row(
+            f"inventory_{arch}", 0.0,
+            f"params={n/1e9:.3f}B;active={n_act/1e9:.3f}B;ckpt_gb={byts/2**30:.1f};"
+            f"train4k_model_tflop={mf/1e12:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

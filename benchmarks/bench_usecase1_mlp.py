@@ -1,0 +1,42 @@
+"""Paper Table 5 analog — use-case 1: packet-based MLP intrusion detection.
+
+Paper: 207 ns end-to-end on the FPGA (222 MHz VPE, feature extract + compute).
+Here: jit'd per-packet-batch inference latency on the host CPU (the latency
+path), plus the FPGA cycle-model estimate for the same kernel instruction
+schedule (fig. 7: 4x prd + vadd + 2x prds), and the routed-path comparison
+(Octopus VPE routing vs forcing everything onto the systolic/MXU path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.core.collaborative import OctopusCycleModel
+from repro.models import paper_models
+
+
+def run() -> list[str]:
+    rows = []
+    params = paper_models.init_paper_model("mlp", jax.random.PRNGKey(0))
+    for batch in (1, 8, 64):
+        x = jax.random.normal(jax.random.PRNGKey(1), (batch, 6), jnp.float32)
+        for policy in ("collaborative", "arype_only"):
+            fn = jax.jit(lambda p, xx: paper_models.mlp_apply(p, xx, policy=policy))
+            t = time_fn(fn, params, x)
+            rows.append(row(
+                f"usecase1_mlp_b{batch}_{policy}", t * 1e6,
+                f"per_pkt_us={t/batch*1e6:.3f};paper_fpga_ns=207"))
+    # FPGA cycle model for the MLP instruction schedule on the VPE
+    m = OctopusCycleModel()
+    layers = [("l0", 1, 6, 12), ("l1", 1, 12, 6), ("l2", 1, 6, 3), ("l3", 1, 3, 2)]
+    rep = m.stack_report(layers, collaborative=True)
+    ns = rep["time_s"] * 1e9
+    rows.append(row("usecase1_mlp_cycle_model", ns / 1e3,
+                    f"model_ns={ns:.0f};paper_ns=207;paper_delta={ns/207:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,33 @@
+"""Use-case 3 — flow-based payload transformer (paper: 35.7 kflow/s at 96.3%
+AryPE efficiency with collaborative block-aggregation offload)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.core.collaborative import OctopusCycleModel, usecase3_layers
+from repro.models import paper_models
+
+
+def run(flows: int = 1000) -> list[str]:
+    rows = []
+    m = OctopusCycleModel()
+    rep = m.stack_report(usecase3_layers(flows), collaborative=True)
+    rows.append(row(
+        "usecase3_cycle_model", rep["time_s"] * 1e6,
+        f"arype_eff={rep['arype_eff']:.3f};paper_eff=0.963;"
+        f"kflow_s={flows/rep['time_s']/1e3:.1f};paper_kflow_s=35.7"))
+
+    params = paper_models.init_paper_model("transformer", jax.random.PRNGKey(0))
+    x = jax.random.uniform(jax.random.PRNGKey(1),
+                           (flows, paper_models.TF_PKTS, paper_models.TF_BYTES))
+    fn = jax.jit(lambda p, xx: paper_models.transformer_apply(p, xx))
+    t = time_fn(fn, params, x)
+    rows.append(row("usecase3_jax", t * 1e6, f"kflow_s={flows/t/1e3:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,43 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_collaborative,
+        bench_feature_extractor,
+        bench_inventory,
+        bench_kernels,
+        bench_usecase1_mlp,
+        bench_usecase3_transformer,
+    )
+
+    suites = [
+        ("inventory(T4)", bench_inventory.run),
+        ("usecase1_mlp(T5)", bench_usecase1_mlp.run),
+        ("collaborative(T6)", bench_collaborative.run),
+        ("usecase3_transformer", bench_usecase3_transformer.run),
+        ("feature_extractor", bench_feature_extractor.run),
+        ("kernels", bench_kernels.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = []
+    for label, fn in suites:
+        t0 = time.perf_counter()
+        try:
+            for r in fn():
+                print(r)
+        except Exception as e:  # keep the harness going; record the failure
+            failures.append((label, repr(e)))
+            print(f"{label},nan,ERROR={e!r}")
+        sys.stderr.write(f"[bench] {label} done in {time.perf_counter()-t0:.1f}s\n")
+    if failures:
+        sys.stderr.write(f"[bench] FAILURES: {failures}\n")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from repro.common.util import (
+    ceil_div,
+    round_up,
+    tree_bytes,
+    tree_param_count,
+    fold_in_str,
+    product,
+)

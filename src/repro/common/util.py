@@ -1,0 +1,65 @@
+"""Small shared utilities: shape math, pytree accounting, rng helpers."""
+from __future__ import annotations
+
+import hashlib
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return ceil_div(a, b) * b
+
+
+def product(xs) -> int:
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out
+
+
+def tree_param_count(tree: Any) -> int:
+    """Total number of elements across all leaves."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree) if hasattr(x, "shape"))
+
+
+def tree_bytes(tree: Any) -> int:
+    total = 0
+    for x in jax.tree.leaves(tree):
+        if hasattr(x, "shape") and hasattr(x, "dtype"):
+            total += int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+    return total
+
+
+def fold_in_str(key: jax.Array, s: str) -> jax.Array:
+    """Deterministically fold a string into a PRNG key (stable across runs)."""
+    h = int.from_bytes(hashlib.sha256(s.encode()).digest()[:4], "little")
+    return jax.random.fold_in(key, h)
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB", "PB"):
+        if abs(n) < 1024.0 or unit == "PB":
+            return f"{n:.2f}{unit}"
+        n /= 1024.0
+    return f"{n:.2f}PB"
+
+
+def human_flops(n: float) -> str:
+    for unit in ("", "K", "M", "G", "T", "P", "E"):
+        if abs(n) < 1000.0 or unit == "E":
+            return f"{n:.2f}{unit}FLOP"
+        n /= 1000.0
+    return f"{n:.2f}EFLOP"
+
+
+def log2_int(n: int) -> int:
+    assert n > 0 and (n & (n - 1)) == 0, f"{n} is not a power of two"
+    return int(math.log2(n))

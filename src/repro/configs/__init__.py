@@ -1,0 +1,15 @@
+"""Arch registry: importing this package registers all assigned architectures
+plus the paper's own use-case models."""
+from repro.configs import (  # noqa: F401
+    gemma3_1b,
+    granite_moe_1b_a400m,
+    hubert_xlarge,
+    kimi_k2_1t_a32b,
+    llama_3_2_vision_90b,
+    qwen3_0_6b,
+    qwen3_4b,
+    starcoder2_15b,
+    xlstm_1_3b,
+    zamba2_2_7b,
+)
+from repro.configs.base import ArchConfig, LayerSpec, ShapeSpec, SHAPES, get_config, list_archs, reduced_config

@@ -1,0 +1,263 @@
+"""Architecture + shape configuration system.
+
+Every assigned architecture is described by an :class:`ArchConfig` built out of a
+*superblock pattern*: the repeated unit of layers that the model scans over
+(``jax.lax.scan``), keeping HLO size ~constant in depth.  Layer kinds:
+
+  mixers: "attn"        full (global) self attention, causal or bidirectional
+          "attn_local"  sliding-window self attention
+          "attn_cross"  cross attention to modality embeddings (vision)
+          "attn_shared" tied-weight self attention (zamba2 shared block)
+          "mamba2"      Mamba-2 / SSD block
+          "mlstm"       xLSTM matrix-memory block
+          "slstm"       xLSTM scalar-memory block
+  ffns:   "mlp"         gated (SwiGLU) MLP
+          "moe"         mixture-of-experts MLP (capacity-based dispatch)
+          "mlp_shared"  tied-weight MLP (zamba2 shared block)
+          "none"        no FFN (cell contains its own projections)
+
+A model is: embed -> [superblock] * num_superblocks (scanned) -> tail layers
+(unscanned leftovers, e.g. gemma3's trailing 2 local layers) -> final norm ->
+logits head.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.common.util import ceil_div, round_up
+
+# ---------------------------------------------------------------------------
+# Layer / block specification
+# ---------------------------------------------------------------------------
+
+MIXER_KINDS = ("attn", "attn_local", "attn_cross", "attn_shared", "mamba2", "mlstm", "slstm", "none")
+FFN_KINDS = ("mlp", "moe", "mlp_shared", "none")
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    mixer: str = "attn"
+    ffn: str = "mlp"
+
+    def __post_init__(self):
+        assert self.mixer in MIXER_KINDS, self.mixer
+        assert self.ffn in FFN_KINDS, self.ffn
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    """One input-shape cell from the assignment."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+# The four assigned shape cells (identical across the 10 LM archs).
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    # -- identity ------------------------------------------------------------
+    name: str = "unnamed"
+    family: str = "dense"  # dense|moe|ssm|hybrid|vlm|audio
+    # -- core dims -----------------------------------------------------------
+    d_model: int = 512
+    num_heads: int = 8
+    num_kv_heads: int = 8
+    head_dim: int = 64
+    d_ff: int = 2048
+    vocab_size: int = 32000
+    # -- depth as superblocks --------------------------------------------------
+    block_pattern: tuple[LayerSpec, ...] = (LayerSpec(),)
+    num_superblocks: int = 4
+    head_pattern: tuple[LayerSpec, ...] = ()  # unscanned layers BEFORE the scan
+    tail_pattern: tuple[LayerSpec, ...] = ()  # unscanned layers AFTER the scan
+    # -- attention -----------------------------------------------------------
+    causal: bool = True
+    mlp_gated: bool = True  # SwiGLU vs plain (gelu) MLP
+    window_size: int = 0  # sliding window for attn_local
+    use_qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    rope_theta_local: float = 10_000.0  # separate theta for local layers (gemma3)
+    attn_logit_softcap: float = 0.0
+    embed_scale: bool = False  # multiply embeddings by sqrt(d_model) (gemma)
+    # -- MoE -----------------------------------------------------------------
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0
+    num_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.001
+    first_dense_ff: int = 0  # layer 0 dense FFN width (kimi-style); 0 = pattern as-is
+    # -- SSM / recurrent -------------------------------------------------------
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    ssm_conv_width: int = 4
+    mlstm_proj_factor: int = 2
+    # -- modality frontend (stubbed per brief) ---------------------------------
+    is_encoder_only: bool = False
+    frontend: str = "none"  # none|audio_frames|vision_patches
+    num_image_tokens: int = 0
+    # -- execution ---------------------------------------------------------
+    attn_impl: str = "auto"  # auto|naive|blockwise (naive = analysis mode)
+    inner_unroll: bool = False  # unroll chunk scans (HLO cost-analysis mode)
+    attn_av_dtype: str = "float32"  # probs dtype for the AV product (bf16 =
+    #   half the attention HBM traffic; normalizers m/l stay fp32)
+    matmul_accum_dtype: str = "float32"  # dot accumulation/psum dtype; bf16
+    #   halves the TP all-reduce bytes (row-parallel contractions psum the
+    #   dot output dtype)
+    moe_combine_dtype: str = "float32"  # expert-output gather/combine dtype;
+    #   the combine's partial-gather all-reduce over the EP axis carries this
+    # -- precision / training -------------------------------------------------
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    optimizer: str = "adamw"  # adamw|adafactor|sgd
+    remat: str = "full"  # none|full
+    vocab_round_to: int = 128
+    # -- technique (Octopus) ---------------------------------------------------
+    router_policy: str = "collaborative"  # collaborative|arype_only|vpe_only
+    use_pallas: bool = False  # lower hot matmuls/attention through Pallas kernels
+    # -- distribution ----------------------------------------------------------
+    fsdp: bool = True
+    shard_kv_seq_decode: bool = False  # SP for very long decode caches
+    sequence_parallel: bool = False  # Megatron-SP: shard the residual stream's
+    #   seq dim over the model axis between blocks (AG/RS instead of AR psums;
+    #   16x smaller remat checkpoints)
+    moe_dp_attention: bool = False  # Switch/GShard layout: batch sharded over
+    #   ALL mesh axes (pure-DP attention, no TP all-reduces), experts over the
+    #   model axis (EP all-to-all at the dispatch boundary); params fully FSDP
+    scan_layers: bool = True
+
+    # -- derived ---------------------------------------------------------------
+    @property
+    def num_layers(self) -> int:
+        return (len(self.block_pattern) * self.num_superblocks
+                + len(self.head_pattern) + len(self.tail_pattern))
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def padded_vocab(self) -> int:
+        return round_up(self.vocab_size, self.vocab_round_to)
+
+    @property
+    def gqa_groups(self) -> int:
+        assert self.num_heads % max(self.num_kv_heads, 1) == 0
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    @property
+    def mlstm_d_inner(self) -> int:
+        return self.mlstm_proj_factor * self.d_model
+
+    @property
+    def supports_decode(self) -> bool:
+        return not self.is_encoder_only
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k: recurrent/hybrid, or mostly-sliding-window."""
+        kinds = [l.mixer for l in self.all_layers()]
+        recurrent = sum(k in ("mamba2", "mlstm", "slstm") for k in kinds)
+        local = sum(k == "attn_local" for k in kinds)
+        return (recurrent + local) >= len(kinds) // 2 and not self.is_encoder_only
+
+    def all_layers(self) -> tuple[LayerSpec, ...]:
+        return (self.head_pattern + self.block_pattern * self.num_superblocks
+                + self.tail_pattern)
+
+    def shape_cells(self) -> list[str]:
+        """Which of the four assigned shape cells apply to this arch."""
+        cells = ["train_4k", "prefill_32k"]
+        if self.supports_decode:
+            cells.append("decode_32k")
+            if self.sub_quadratic:
+                cells.append("long_500k")
+        return cells
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Callable[[], ArchConfig]] = {}
+
+
+def register(name: str):
+    def deco(fn: Callable[[], ArchConfig]):
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def get_config(name: str) -> ArchConfig:
+    # Import the per-arch modules lazily so `import repro.configs.base` stays light.
+    import repro.configs  # noqa: F401  (triggers registration)
+
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def list_archs() -> list[str]:
+    import repro.configs  # noqa: F401
+
+    return sorted(_REGISTRY)
+
+
+def reduced_config(cfg: ArchConfig) -> ArchConfig:
+    """A tiny same-family config for CPU smoke tests."""
+    kw = dict(
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=min(cfg.num_kv_heads, 2) if cfg.num_kv_heads < cfg.num_heads else 4,
+        head_dim=16,
+        d_ff=max(128, 0 if cfg.d_ff == 0 else 128) if cfg.d_ff else 0,
+        vocab_size=256,
+        num_superblocks=min(cfg.num_superblocks, 2),
+        window_size=min(cfg.window_size, 16) if cfg.window_size else 0,
+        num_image_tokens=16 if cfg.num_image_tokens else 0,
+        param_dtype="float32",
+        compute_dtype="float32",
+        vocab_round_to=16,
+        fsdp=False,
+    )
+    if cfg.num_experts:
+        # capacity_factor high enough that smoke tests see no capacity drops
+        # (drops are legitimate MoE semantics but break decode==train checks)
+        kw.update(num_experts=4, experts_per_token=2, moe_d_ff=32,
+                  num_shared_experts=min(cfg.num_shared_experts, 1),
+                  first_dense_ff=64 if cfg.first_dense_ff else 0,
+                  capacity_factor=8.0)
+    if cfg.ssm_state:
+        kw.update(ssm_state=8, ssm_head_dim=16, ssm_chunk=8)
+    return cfg.replace(**kw)

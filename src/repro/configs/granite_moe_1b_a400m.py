@@ -1,0 +1,30 @@
+"""granite-moe-1b-a400m [moe]: 24L d_model=1024 16H (GQA kv=8) expert d_ff=512
+vocab=49155, MoE 32 experts top-8 [hf:ibm-granite/granite-3.0-1b-a400m-base; hf].
+
+The 512-wide experts are the Octopus under-utilization regime at LM scale —
+this arch is the strongest showcase for the paper's VPE/collaborative routing.
+vocab 49155 is not shard-friendly; padded to a multiple of 128 (logits masked).
+"""
+from repro.configs.base import ArchConfig, LayerSpec, register
+
+
+@register("granite-moe-1b-a400m")
+def make() -> ArchConfig:
+    return ArchConfig(
+        name="granite-moe-1b-a400m",
+        family="moe",
+        d_model=1024,
+        num_heads=16,
+        num_kv_heads=8,
+        head_dim=64,
+        d_ff=512,
+        vocab_size=49155,
+        block_pattern=(LayerSpec("attn", "moe"),),
+        num_superblocks=24,
+        num_experts=32,
+        experts_per_token=8,
+        moe_d_ff=512,
+        rope_theta=1e4,
+        param_dtype="float32",
+        optimizer="adamw",
+    )

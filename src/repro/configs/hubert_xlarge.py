@@ -1,0 +1,33 @@
+"""hubert-xlarge [audio]: 48L d_model=1280 16H (kv=16) d_ff=5120 vocab=504 —
+encoder-only transformer backbone [arXiv:2106.07447; unverified].
+
+The audio frontend (conv feature encoder) is a STUB per the assignment:
+input_specs provides precomputed frame embeddings (B, S, d_model).  Training
+is masked-unit prediction (per-frame CE over the 504 cluster vocabulary).
+Encoder-only: no decode shape cells.
+"""
+from repro.configs.base import ArchConfig, LayerSpec, register
+
+
+@register("hubert-xlarge")
+def make() -> ArchConfig:
+    return ArchConfig(
+        name="hubert-xlarge",
+        family="audio",
+        d_model=1280,
+        num_heads=16,
+        num_kv_heads=16,
+        head_dim=80,
+        d_ff=5120,
+        vocab_size=504,
+        block_pattern=(LayerSpec("attn", "mlp"),),
+        num_superblocks=48,
+        mlp_gated=False,  # hubert uses a plain gelu MLP
+        causal=False,
+        is_encoder_only=True,
+        frontend="audio_frames",
+        rope_theta=1e4,
+        vocab_round_to=8,
+        param_dtype="float32",
+        optimizer="adamw",
+    )

@@ -1,0 +1,35 @@
+"""kimi-k2-1t-a32b [moe]: 61L d_model=7168 64H (GQA kv=8) expert d_ff=2048
+vocab=163840, MoE 384 experts top-8 + 1 shared expert; first layer dense
+(DeepSeek-V3-style) [arXiv:2501.kimi2; unverified].
+
+At 1.04T parameters this is the framework's capacity stress test: bf16 params,
+Adafactor (factored second moment), full remat, FSDP x TP x EP sharding.
+"""
+from repro.configs.base import ArchConfig, LayerSpec, register
+
+
+@register("kimi-k2-1t-a32b")
+def make() -> ArchConfig:
+    return ArchConfig(
+        name="kimi-k2-1t-a32b",
+        family="moe",
+        d_model=7168,
+        num_heads=64,
+        num_kv_heads=8,
+        head_dim=112,
+        d_ff=2048,  # per-expert width (assignment table)
+        vocab_size=163840,
+        head_pattern=(LayerSpec("attn", "mlp"),),  # layer 0 dense
+        block_pattern=(LayerSpec("attn", "moe"),),
+        num_superblocks=60,
+        num_experts=384,
+        experts_per_token=8,
+        moe_d_ff=2048,
+        num_shared_experts=1,
+        first_dense_ff=16384,
+        rope_theta=5e4,
+        param_dtype="bfloat16",
+        compute_dtype="bfloat16",
+        optimizer="adafactor",
+        remat="full",
+    )

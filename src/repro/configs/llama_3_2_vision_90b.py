@@ -1,0 +1,35 @@
+"""llama-3.2-vision-90b [vlm]: 100L d_model=8192 64H (GQA kv=8) d_ff=28672
+vocab=128256 — cross-attention image layers every 5th layer
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified].
+
+The vision frontend is a STUB per the assignment: input_specs provides
+precomputed patch embeddings (B, num_image_tokens, d_model); cross-attn layers
+attend to them (no rope on cross kv).  Superblock = 4 self + 1 cross, x20.
+"""
+from repro.configs.base import ArchConfig, LayerSpec, register
+
+_S = LayerSpec("attn", "mlp")
+_X = LayerSpec("attn_cross", "mlp")
+
+
+@register("llama-3.2-vision-90b")
+def make() -> ArchConfig:
+    return ArchConfig(
+        name="llama-3.2-vision-90b",
+        family="vlm",
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=28672,
+        vocab_size=128256,
+        block_pattern=(_S, _S, _S, _S, _X),
+        num_superblocks=20,
+        rope_theta=5e5,
+        frontend="vision_patches",
+        num_image_tokens=1600,
+        param_dtype="bfloat16",
+        compute_dtype="bfloat16",
+        optimizer="adamw",
+        remat="full",
+    )

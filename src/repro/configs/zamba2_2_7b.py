@@ -1,0 +1,36 @@
+"""zamba2-2.7b [hybrid]: 54L d_model=2560 32H (kv=32) d_ff=10240 vocab=32000,
+ssm_state=64 — Mamba2 blocks + a shared (tied-weight) attention+MLP block
+[arXiv:2411.15242; hf].
+
+Superblock = 5 mamba2 + 1 shared attention block, x9 = 54 layers.  The shared
+block's weights live once in params["shared"] and are reused by every
+superblock (zamba2's parameter-sharing trick); its KV cache is still
+per-occurrence.  Recurrent decode state makes long_500k runnable.
+"""
+from repro.configs.base import ArchConfig, LayerSpec, register
+
+_M = LayerSpec("mamba2", "none")
+_A = LayerSpec("attn_shared", "mlp_shared")
+
+
+@register("zamba2-2.7b")
+def make() -> ArchConfig:
+    return ArchConfig(
+        name="zamba2-2.7b",
+        family="hybrid",
+        d_model=2560,
+        num_heads=32,
+        num_kv_heads=32,
+        head_dim=80,
+        d_ff=10240,
+        vocab_size=32000,
+        block_pattern=(_M, _M, _M, _M, _M, _A),
+        num_superblocks=9,
+        ssm_state=64,
+        ssm_head_dim=64,
+        ssm_expand=2,
+        ssm_chunk=256,
+        rope_theta=1e4,
+        param_dtype="float32",
+        optimizer="adamw",
+    )

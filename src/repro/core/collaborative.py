@@ -1,0 +1,221 @@
+"""Heterogeneous collaborative computing (paper §3.2.3).
+
+Two artifacts live here:
+
+1. :func:`collaborative_forward` — execute a stack of matmul layers with the
+   router's placement (small layers -> VPE path, large -> AryPE path, block
+   aggregation fused), plus the explicit *unfused* mode for the paper's
+   "wo/ collaborating" ablation (Table 6).
+
+2. :class:`OctopusCycleModel` — a cycle-accurate-ish analytical model of the
+   paper's FPGA implementation (16x16 AryPE, 8-lane x 2-sublane SIMDU, 8-unit
+   VU, 222 MHz, dual 16-byte memory channels).  We use it to *validate the
+   paper's own claims* (Table 6's 53 -> 90 kflow/s, 1.69x; use-case 3's
+   35.7 kflow/s) from first principles before going beyond them on TPU.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.util import ceil_div
+from repro.core import router
+
+
+# ---------------------------------------------------------------------------
+# Execution
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MatmulLayer:
+    w_name: str
+    activation: Optional[str] = None
+
+
+def collaborative_forward(
+    x: jax.Array,
+    weights: Sequence[jax.Array],
+    activations: Sequence[Optional[str]],
+    *,
+    policy: str = "collaborative",
+    use_pallas: bool = False,
+    fused_aggregation: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """Run x through a stack of routed matmuls.  ``fused_aggregation=False``
+    reproduces the 'wo/ collaborating' ablation: AryPE-path matmuls write
+    K-block partials to memory and aggregate in a separate pass."""
+    h = x
+    for w, act in zip(weights, activations):
+        if not fused_aggregation:
+            m, k = int(np.prod(h.shape[:-1])), h.shape[-1]
+            r = router.route_matmul(m, k, w.shape[-1], policy=policy)
+            if r.path == "arype":
+                if use_pallas:
+                    from repro.kernels.arype_matmul import arype_matmul_unfused
+
+                    h = arype_matmul_unfused(
+                        h.reshape(-1, k), w, activation=act or "none", interpret=interpret
+                    ).reshape(*h.shape[:-1], w.shape[-1])
+                else:
+                    h = _unfused_jnp(h, w, act)
+                continue
+        h = router.matmul(h, w, policy=policy, activation=act,
+                          use_pallas=use_pallas, interpret=interpret)
+    return h
+
+
+def _unfused_jnp(x: jax.Array, w: jax.Array, act: Optional[str], bk: int = 32) -> jax.Array:
+    """bk=32 matches the paper's §3.2.3 blocking example (a 32x32 array splits
+    K=96 into blocks); a 128x128 MXU absorbs these K's in one pass — itself a
+    hardware-adaptation finding recorded in EXPERIMENTS.md §Validation.
+    Partials are materialized through optimization barriers so XLA cannot
+    re-fuse the aggregation (the 'wo/ collaborating' semantics)."""
+    k = x.shape[-1]
+    nk = ceil_div(k, bk)
+    partials = []
+    for i in range(nk):
+        xs = x[..., i * bk : (i + 1) * bk]
+        ws = w[i * bk : (i + 1) * bk]
+        p = jax.lax.dot_general(xs, ws, (((x.ndim - 1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        partials.append(jax.lax.optimization_barrier(p))
+    out = partials[0]
+    for p in partials[1:]:
+        out = jax.lax.optimization_barrier(out + p)  # serialized VU-on-AryPE stall
+    if act == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif act == "silu":
+        out = out * jax.nn.sigmoid(out)
+    elif act == "gelu":
+        out = jax.nn.gelu(out)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Analytical FPGA cycle model (validates the paper's own numbers)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class OctopusHW:
+    """Paper §4.1 implementation parameters."""
+
+    array_k: int = 16  # AryPE systolic array is 16x16
+    clock_hz: float = 222e6  # computing-domain clock
+    simd_lanes: int = 8  # SIMDU lanes
+    sublanes: int = 2  # sub-lanes per lane
+    mults_per_sublane: int = 4  # 4-wide vector product per sub-lane
+    vu_units: int = 8  # VU parallel adder/mult units
+    mem_channels: int = 2  # dual memory channels
+    bytes_per_cycle: int = 16  # 128-bit channel width
+
+
+@dataclass
+class LayerCost:
+    name: str
+    mk_n: tuple[int, int, int]
+    engine: str
+    compute_cycles: float
+    stall_cycles: float
+    mem_cycles: float
+    useful_macs: float
+
+    @property
+    def total_cycles(self) -> float:
+        return max(self.compute_cycles + self.stall_cycles, self.mem_cycles)
+
+
+class OctopusCycleModel:
+    """Cycle model for a stack of (M,K)x(K,N) layers on the Octopus FPGA.
+
+    AryPE: an (M,K)x(K,N) matmul is blocked into ceil(K/k)*ceil(N/k) passes of
+    (M,k)x(k,k); each pass streams M rows plus 2k fill/drain cycles.  Without
+    collaboration, each extra K-block costs an aggregation stall of M rows per
+    N-block (the array is idle while partial blocks are added).  Data movement
+    uses the dual 16-byte channels (int8 operands).
+
+    VPE/SIMDU: 8 lanes x 2 sublanes x 4 mults = 64 MACs/cycle.
+    VU: 8 adds/cycle (aggregation offload in collaborative mode).
+    """
+
+    def __init__(self, hw: OctopusHW = OctopusHW()):
+        self.hw = hw
+
+    def matmul_cost(self, m: int, k: int, n: int, engine: str, collaborative: bool) -> LayerCost:
+        hw = self.hw
+        macs = float(m) * k * n
+        if engine == "vpe":
+            mults = hw.simd_lanes * hw.sublanes * hw.mults_per_sublane
+            compute = macs / mults
+            mem = (m * k + k * n + m * n) / (hw.mem_channels * hw.bytes_per_cycle)
+            return LayerCost("vpe", (m, k, n), "vpe", compute, 0.0, mem, macs)
+        kb = ceil_div(k, hw.array_k)
+        nb = ceil_div(n, hw.array_k)
+        compute = kb * nb * (m + 2 * hw.array_k)
+        stall = 0.0 if collaborative else (kb - 1) * nb * m  # aggregation stalls the array
+        # operands stream per pass: activations (m x k-block) per N-block + weights
+        bytes_moved = nb * (m * min(k, hw.array_k) * kb) + k * n + m * n * 4  # int8 in, fp32 partials out
+        mem = bytes_moved / (hw.mem_channels * hw.bytes_per_cycle)
+        return LayerCost("arype", (m, k, n), "arype", compute, stall, mem, macs)
+
+    def stack_report(
+        self, layers: Sequence[tuple[str, int, int, int]], *, collaborative: bool
+    ) -> dict:
+        """layers: (name, M, K, N).  Placement: the router decides (same policy
+        as the JAX execution path) when collaborative; everything on AryPE when
+        not (the 'straightforwardly inserted accelerator')."""
+        hw = self.hw
+        arype, vpe = [], []
+        for name, m, k, n in layers:
+            r = router.route_matmul(m, k, n, policy="collaborative")
+            engine = r.path if collaborative else "arype"
+            cost = self.matmul_cost(m, k, n, engine, collaborative)
+            (vpe if engine == "vpe" else arype).append((name, cost))
+        ary_cycles = sum(c.total_cycles for _, c in arype)
+        vpe_cycles = sum(c.total_cycles for _, c in vpe)
+        # Engines run concurrently in collaborative mode; serially otherwise.
+        total = max(ary_cycles, vpe_cycles) if collaborative else ary_cycles + vpe_cycles
+        ary_peak = hw.array_k**2
+        vpe_peak = hw.simd_lanes * hw.sublanes * hw.mults_per_sublane
+        ary_macs = sum(c.useful_macs for _, c in arype)
+        vpe_macs = sum(c.useful_macs for _, c in vpe)
+        return {
+            "collaborative": collaborative,
+            "arype_eff": ary_macs / (ary_cycles * ary_peak) if ary_cycles else 0.0,
+            "vpe_eff": vpe_macs / (vpe_cycles * vpe_peak) if vpe_cycles else 0.0,
+            "total_cycles": total,
+            "time_s": total / hw.clock_hz,
+            "arype_cycles": ary_cycles,
+            "vpe_cycles": vpe_cycles,
+        }
+
+
+def usecase2_layers(f: int) -> list[tuple[str, int, int, int]]:
+    """Paper use-case 2 CNN matmul shapes for f tracked flows (§4.2)."""
+    return [
+        ("conv1", 20 * f, 3, 32),
+        ("conv2", 10 * f, 96, 32),
+        ("conv3", 5 * f, 96, 32),
+        ("fc", f, 96, 128),
+        ("linear", f, 128, 162),
+    ]
+
+
+def usecase3_layers(f: int) -> list[tuple[str, int, int, int]]:
+    """Paper use-case 3 transformer matmul shapes for f tracked flows."""
+    out = []
+    for name, m, k, n in [
+        ("wq", 15, 16, 64),
+        ("wk", 15, 16, 64),
+        ("wv", 15, 16, 64),
+        ("qk", 15, 64, 15),
+        ("av", 15, 15, 64),
+        ("mlp1", 15, 64, 128),
+        ("mlp2", 15, 128, 64),
+    ]:
+        out.append((name, m * f, k, n))
+    return out

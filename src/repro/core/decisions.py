@@ -1,0 +1,44 @@
+"""Control domain / RV-core analogue (paper §3.4): turn DL inference outputs
+into data-plane rule-table updates (paper working-procedure steps 5-6)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ACTIONS = ("allow", "deny", "mark")
+
+
+@dataclass
+class RuleTable:
+    """The switch-facing rule table the control domain maintains."""
+
+    rules: dict[int, dict] = field(default_factory=dict)
+    generation: int = 0
+
+    def update(self, flow_ids: np.ndarray, actions: np.ndarray, classes: Optional[np.ndarray] = None):
+        self.generation += 1
+        for i, fid in enumerate(np.asarray(flow_ids).tolist()):
+            self.rules[int(fid)] = {
+                "action": ACTIONS[int(actions[i])],
+                "class": int(classes[i]) if classes is not None else -1,
+                "generation": self.generation,
+            }
+
+    def lookup(self, flow_id: int) -> dict:
+        return self.rules.get(int(flow_id), {"action": "allow", "class": -1, "generation": 0})
+
+
+def decide_binary(logits: jax.Array, deny_threshold: float = 0.5) -> jax.Array:
+    """Binary intrusion decision (use-case 1): logits (..., 2) -> 0 allow/1 deny."""
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    return (p[..., 1] > deny_threshold).astype(jnp.int32)
+
+
+def decide_class(logits: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Classification decision (use-cases 2/3): -> (action=mark, class id)."""
+    cls = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jnp.full_like(cls, ACTIONS.index("mark")), cls

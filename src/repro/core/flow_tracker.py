@@ -1,0 +1,165 @@
+"""Flow tracker (paper §3.1): hash-indexed flow-state establishment, update,
+and freeing, with ready-flow emission at the top-n packet threshold.
+
+State per slot (paper: "MAC address, packet number of current flow, the
+timestamp of last packet"):
+  * ``tuple_id``   the flow's 5-tuple hash (collision detection / eviction)
+  * ``count``      packets seen so far
+  * ``last_ts``    timestamp of the latest packet
+  * ``features``   the 16-lane history register (ALU cluster output)
+  * ``series``     per-flow vector memory (top-n arrival intervals / sizes)
+  * ``payload``    per-flow payload matrix (top-k packets x top-b bytes)
+
+Collisions follow the paper's freeing rule: a new tuple hashing onto an
+occupied slot evicts the stale flow (outdated-flow recycling).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.flow_features.flow_features import apply_alu_program
+from repro.kernels.flow_features.ops import HIST, META, META_WIDTH
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+# history lanes that hold running minima start at INT_MAX
+_MIN_LANES = (HIST["min_size"], HIST["min_intv"])
+
+
+class TrackerState(NamedTuple):
+    tuple_id: jax.Array  # (F,) int32
+    count: jax.Array  # (F,) int32
+    last_ts: jax.Array  # (F,) int32
+    features: jax.Array  # (F, 16) int32
+    series: jax.Array  # (F, top_n) int32  (arrival-interval vector memory)
+    sizes: jax.Array  # (F, top_n) int32  (packet-size vector memory)
+    payload: jax.Array  # (F, top_k, pay_bytes) int32
+
+
+class PacketBatch(NamedTuple):
+    """Struct-of-arrays packet records (the parser's output, §3.1 step 1)."""
+
+    ts: jax.Array  # (P,) int32 microseconds
+    size: jax.Array  # (P,) int32
+    dir: jax.Array  # (P,) int32 0/1
+    flags: jax.Array  # (P,) int32
+    proto: jax.Array  # (P,) int32
+    tuple_hash: jax.Array  # (P,) int32 hash of the 5-tuple
+    payload: jax.Array  # (P, pay_bytes) int32 (truncated payload)
+
+
+def fresh_feature_word() -> jax.Array:
+    w = jnp.zeros((16,), jnp.int32)
+    for lane in _MIN_LANES:
+        w = w.at[lane].set(INT_MAX)
+    return w
+
+
+def init_state(table_size: int, top_n: int, top_k: int, pay_bytes: int) -> TrackerState:
+    return TrackerState(
+        tuple_id=jnp.zeros((table_size,), jnp.int32),
+        count=jnp.zeros((table_size,), jnp.int32),
+        last_ts=jnp.zeros((table_size,), jnp.int32),
+        features=jnp.tile(fresh_feature_word()[None], (table_size, 1)),
+        series=jnp.zeros((table_size, top_n), jnp.int32),
+        sizes=jnp.zeros((table_size, top_n), jnp.int32),
+        payload=jnp.zeros((table_size, top_k, pay_bytes), jnp.int32),
+    )
+
+
+def hash_slot(tuple_hash: jax.Array, table_size: int) -> jax.Array:
+    """Multiplicative hash onto the flow table (FPGA uses CRC; same semantics)."""
+    h = tuple_hash.astype(jnp.uint32) * jnp.uint32(0x9E3779B1)
+    h = h ^ (h >> 16)
+    return (h % jnp.uint32(table_size)).astype(jnp.int32)
+
+
+def build_meta(pkt, arv_intv: jax.Array) -> jax.Array:
+    """Assemble the meta register (paper Table 2) for one packet."""
+    m = jnp.zeros((META_WIDTH,), jnp.int32)
+    m = m.at[META["pkt_size"]].set(pkt.size)
+    m = m.at[META["arv_intv"]].set(arv_intv)
+    m = m.at[META["dir"]].set(pkt.dir)
+    m = m.at[META["flags"]].set(pkt.flags)
+    m = m.at[META["ts"]].set(pkt.ts)
+    m = m.at[META["payload_len"]].set(jnp.minimum(pkt.size, pkt.payload.shape[-1]))
+    m = m.at[META["one"]].set(1)
+    m = m.at[META["size_fwd"]].set(jnp.where(pkt.dir == 0, pkt.size, 0))
+    m = m.at[META["size_bwd"]].set(jnp.where(pkt.dir == 1, pkt.size, 0))
+    m = m.at[META["neg_pkt_size"]].set(-pkt.size)
+    m = m.at[META["neg_arv_intv"]].set(-arv_intv)
+    m = m.at[META["proto"]].set(pkt.proto)
+    return m
+
+
+class StepOut(NamedTuple):
+    slot: jax.Array
+    ready: jax.Array  # flow hit top_n with this packet
+    new_flow: jax.Array
+    evicted: jax.Array
+
+
+def process_packets(
+    state: TrackerState,
+    packets: PacketBatch,
+    program: jax.Array,
+    *,
+    top_n: int,
+) -> tuple[TrackerState, StepOut]:
+    """Order-exact oracle: lax.scan over packets (the FPGA processes packets
+    serially at line rate).  See feature_extractor.extract_segmented for the
+    TPU-parallel path."""
+    table_size = state.tuple_id.shape[0]
+    top_k = state.payload.shape[1]
+
+    def step(st: TrackerState, pkt: PacketBatch):
+        slot = hash_slot(pkt.tuple_hash, table_size)
+        occupied = st.count[slot] > 0
+        hit = occupied & (st.tuple_id[slot] == pkt.tuple_hash)
+        evict = occupied & ~hit
+        is_new = ~hit
+
+        count0 = jnp.where(is_new, 0, st.count[slot])
+        feats0 = jnp.where(is_new, fresh_feature_word(), st.features[slot])
+        series0 = jnp.where(is_new, jnp.zeros_like(st.series[slot]), st.series[slot])
+        sizes0 = jnp.where(is_new, jnp.zeros_like(st.sizes[slot]), st.sizes[slot])
+        pay0 = jnp.where(is_new, jnp.zeros_like(st.payload[slot]), st.payload[slot])
+
+        arv_intv = jnp.where(count0 > 0, pkt.ts - st.last_ts[slot], 0)
+        meta = build_meta(pkt, arv_intv)
+        new_feats = apply_alu_program(program, meta, feats0)
+
+        idx = jnp.minimum(count0, top_n - 1)
+        series1 = series0.at[idx].set(jnp.where(count0 < top_n, arv_intv, series0[idx]))
+        sizes1 = sizes0.at[idx].set(jnp.where(count0 < top_n, pkt.size, sizes0[idx]))
+        kidx = jnp.minimum(count0, top_k - 1)
+        pay1 = pay0.at[kidx].set(jnp.where(count0 < top_k, pkt.payload, pay0[kidx]))
+
+        count1 = count0 + 1
+        st1 = TrackerState(
+            tuple_id=st.tuple_id.at[slot].set(pkt.tuple_hash),
+            count=st.count.at[slot].set(count1),
+            last_ts=st.last_ts.at[slot].set(pkt.ts),
+            features=st.features.at[slot].set(new_feats),
+            series=st.series.at[slot].set(series1),
+            sizes=st.sizes.at[slot].set(sizes1),
+            payload=st.payload.at[slot].set(pay1),
+        )
+        out = StepOut(slot=slot, ready=count1 == top_n, new_flow=is_new, evicted=evict)
+        return st1, out
+
+    return lax.scan(step, state, packets)
+
+
+def release_flows(state: TrackerState, slots: jax.Array) -> TrackerState:
+    """FIN handling: computing finished for these slots; recycle storage
+    (paper: 'read out the top address in in-flight FIFO and set packet
+    numbers in this address to zero')."""
+    return state._replace(
+        count=state.count.at[slots].set(0),
+        features=state.features.at[slots].set(fresh_feature_word()),
+    )

@@ -1,0 +1,2 @@
+from repro.data.packets import PacketTraceConfig, synth_packet_trace
+from repro.data.tokens import TokenPipeline, TokenPipelineConfig

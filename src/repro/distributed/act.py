@@ -1,0 +1,95 @@
+"""Activation sharding constraints (thread-local mesh context).
+
+GSPMD propagates parameter shardings through straight-line code well, but
+propagation through nested while loops (superblock scan + attention chunk
+scan) + remat can fall back to replication — which shows up as huge
+all-gathers and 100+ GiB temp buffers.  Models therefore pin their key
+activations (residual stream, per-head tensors, scan carries, MoE dispatch
+buffers) with ``shard_act(x, "batch", None, "heads", None)``.
+
+Outside a mesh context (unit tests, single-device runs) shard_act is a no-op,
+so model code never needs to know whether it is distributed.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_CTX = threading.local()
+
+# logical activation-axis -> mesh axes
+_ACT_RULES = {
+    "batch": ("pod", "data"),
+    "batch_dp": ("pod", "data"),  # always the pure-DP axes (MoE group dim)
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "expert": ("model",),
+    "embed": (),  # residual stream stays replicated on the model axis
+    "vocab": ("model",),
+    "inner": ("model",),
+    "kv_seq": ("model",),
+    "seq_sp": ("model",),  # sequence-parallel residual stream
+}
+
+
+def rules_for(cfg=None) -> dict:
+    """Activation rules, layout-aware (see ArchConfig.moe_dp_attention)."""
+    rules = dict(_ACT_RULES)
+    if cfg is not None and getattr(cfg, "moe_dp_attention", False):
+        rules.update(
+            batch=("pod", "data", "model"),  # pure-DP attention
+            heads=(), kv_heads=(), mlp=(), inner=(),
+        )
+    return rules
+
+
+@contextmanager
+def use_act_sharding(mesh: Optional[Mesh], cfg=None):
+    prev = getattr(_CTX, "env", None)
+    _CTX.env = (mesh, rules_for(cfg)) if mesh is not None else None
+    try:
+        yield
+    finally:
+        _CTX.env = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    env = getattr(_CTX, "env", None)
+    return env[0] if env else None
+
+
+def shard_act(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Constrain activation x's dims to the mesh axes given by logical names
+    (None = replicated dim).  Silently skips non-divisible dims and inactive
+    contexts."""
+    env = getattr(_CTX, "env", None)
+    if env is None:
+        return x
+    mesh, rules = env
+    if mesh is None or mesh.size == 1:
+        return x
+    assert len(names) == x.ndim, (names, x.shape)
+    parts = []
+    used: set[str] = set()
+    for dim, name in zip(x.shape, names):
+        if name is None:
+            parts.append(None)
+            continue
+        axes = tuple(a for a in rules.get(name, ()) if a in mesh.axis_names
+                     and a not in used)
+        size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+        if not axes or size <= 1 or dim % size != 0:
+            parts.append(None)
+            continue
+        used.update(axes)
+        parts.append(axes[0] if len(axes) == 1 else axes)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*parts)))

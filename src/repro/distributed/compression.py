@@ -1,0 +1,69 @@
+"""Int8 gradient compression with error feedback (distributed-optimization
+trick for bandwidth-bound data-parallel training).
+
+Usage inside a shard_map'd gradient exchange: quantize local grads to int8
+with a per-tensor scale, all-reduce (psum) the int8-represented values in
+fp16/fp32 accumulators, dequantize, and fold the quantization residual into
+the next step (error feedback keeps the method unbiased over time).
+
+Under pjit/GSPMD the all-reduce is implicit; the compression transform is
+exposed as a pair (encode, decode) applied around the optimizer step, plus a
+shard_map collective helper for the explicit-collective path.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressedGrad(NamedTuple):
+    q: jax.Array  # int8 payload
+    scale: jax.Array  # () fp32
+
+
+def encode_int8(g: jax.Array) -> CompressedGrad:
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return CompressedGrad(q=q, scale=scale)
+
+
+def decode_int8(c: CompressedGrad) -> jax.Array:
+    return c.q.astype(jnp.float32) * c.scale
+
+
+def compress_tree(grads: Any) -> Any:
+    return jax.tree.map(encode_int8, grads)
+
+
+def decompress_tree(comp: Any) -> Any:
+    return jax.tree.map(decode_int8, comp, is_leaf=lambda x: isinstance(x, CompressedGrad))
+
+
+def compressed_psum_with_feedback(
+    grads: Any, errors: Any, axis_name: str
+) -> tuple[Any, Any]:
+    """shard_map path: per-leaf int8 quantization with error feedback, then
+    psum of the dequantized payloads over ``axis_name``.
+
+    Returns (reduced grads (mean), new error residuals)."""
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        c = encode_int8(gf)
+        deq = decode_int8(c)
+        new_e = gf - deq  # local residual carried to next step
+        red = jax.lax.psum(deq, axis_name) / n
+        return red, new_e
+
+    out = jax.tree.map(one, grads, errors)
+    red = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return red, err
+
+
+def init_error_feedback(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

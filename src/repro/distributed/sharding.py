@@ -1,0 +1,235 @@
+"""Logical-axis -> mesh-axis sharding rules (DP / FSDP / TP / EP / SP).
+
+Every parameter spec carries logical axis names; this module maps them onto
+the production mesh axes (pod, data, model):
+
+  batch        -> (pod, data)        data parallel (pod = outer DP axis)
+  vocab        -> model              TP on embedding / lm head
+  heads/kv     -> model              TP on attention projections (if divisible)
+  mlp          -> model              TP on FFN
+  expert       -> model              EP on MoE expert banks
+  ssm_inner    -> model              TP on Mamba/mLSTM inner projections
+  embed        -> fsdp axes          ZeRO-3 parameter sharding (if cfg.fsdp)
+  kv_seq       -> model              SP on very long decode caches (optional)
+
+Rules degrade gracefully: any dimension not divisible by its mesh axes falls
+back to replication (recorded, so the roofline report can flag the padding /
+replication waste — e.g. gemma3's 4 q-heads on a 16-way model axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def logical_rules(cfg: ArchConfig, mesh: Mesh) -> dict[str, Any]:
+    if getattr(cfg, "moe_dp_attention", False):
+        # Switch/GShard layout: no TP — dense params fully FSDP over every
+        # axis, experts over model (EP), batch over everything.
+        all_axes = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+        return {
+            "batch": all_axes,
+            "vocab": "model",
+            "heads": None, "kv_heads": None, "mlp": None,
+            "expert": "model",
+            "ssm_inner": None, "mlstm_inner": None, "mlstm_qk": None,
+            "slstm_gates": None, "embed_out": None,
+            "embed": tuple(a for a in ("pod", "data") if a in mesh.axis_names),
+            "layers": None, "kv_seq": None, "seq": None,
+        }
+    fsdp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    rules: dict[str, Any] = {
+        "batch": tuple(a for a in ("pod", "data") if a in mesh.axis_names) or None,
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "expert": "model",
+        "ssm_inner": "model",
+        "mlstm_inner": "model",
+        "mlstm_qk": None,
+        "slstm_gates": "model",
+        "embed_out": None,
+        "embed": fsdp_axes if cfg.fsdp else None,
+        "layers": None,
+        "kv_seq": "model" if cfg.shard_kv_seq_decode else None,
+        "seq": None,
+    }
+    return rules
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def spec_for_shape(
+    shape: tuple[int, ...],
+    logical: tuple[Optional[str], ...],
+    rules: dict[str, Any],
+    mesh: Mesh,
+    report: Optional[list] = None,
+) -> P:
+    """Build a PartitionSpec, replicating any dim whose size is not divisible
+    by its assigned mesh axes, and never assigning one mesh axis twice."""
+    parts = []
+    used: set[str] = set()
+    for dim, name in zip(shape, logical):
+        axes = rules.get(name) if name else None
+        if axes is None:
+            parts.append(None)
+            continue
+        axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+        axes_t = tuple(a for a in axes_t if a not in used)
+        size = _axis_size(mesh, axes_t)
+        if not axes_t or size <= 1:
+            parts.append(None)
+            continue
+        if dim % size != 0:
+            if report is not None:
+                report.append((name, dim, axes_t, "replicated: not divisible"))
+            parts.append(None)
+            continue
+        used.update(axes_t)
+        parts.append(axes_t[0] if len(axes_t) == 1 else axes_t)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def shardings_for(
+    tree_logical: Any,
+    tree_abstract: Any,
+    cfg: ArchConfig,
+    mesh: Mesh,
+    report: Optional[list] = None,
+) -> Any:
+    """Map a tree of logical-axis tuples + abstract shapes to NamedShardings."""
+    rules = logical_rules(cfg, mesh)
+
+    def one(axes, aval):
+        return NamedSharding(mesh, spec_for_shape(aval.shape, axes, rules, mesh, report))
+
+    return jax.tree.map(one, tree_logical, tree_abstract,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            a is None or isinstance(a, str) for a in x))
+
+
+# ---------------------------------------------------------------------------
+# Activation / batch shardings
+# ---------------------------------------------------------------------------
+
+def batch_spec(mesh: Mesh, batch_size: int, extra_dims: int = 1,
+               all_axes: bool = False) -> P:
+    """Shard the leading batch dim over (pod, data) — or every axis for the
+    pure-DP (moe_dp_attention) layout — when divisible."""
+    names = ("pod", "data", "model") if all_axes else ("pod", "data")
+    axes = tuple(a for a in names if a in mesh.axis_names)
+    size = _axis_size(mesh, axes)
+    if axes and batch_size % size == 0:
+        return P(axes if len(axes) > 1 else axes[0], *([None] * extra_dims))
+    return P(*([None] * (extra_dims + 1)))
+
+
+def input_shardings(mesh: Mesh, batch_abstract: dict,
+                    cfg: Optional[ArchConfig] = None) -> dict:
+    """Shardings for a model-inputs dict: batch-sharded on the leading dim."""
+    all_axes = bool(cfg and getattr(cfg, "moe_dp_attention", False))
+    out = {}
+    for k, v in batch_abstract.items():
+        out[k] = NamedSharding(mesh, batch_spec(mesh, v.shape[0], v.ndim - 1,
+                                                all_axes=all_axes))
+    return out
+
+
+def opt_shardings(param_sh: Any, params_abstract: Any, opt_abstract: Any) -> Any:
+    """Optimizer-state shardings mirror the parameter shardings; factored
+    (Adafactor) leaves drop the corresponding PartitionSpec dims."""
+    flat_ps, _ = jax.tree.flatten(param_sh)
+    flat_pa, _ = jax.tree.flatten(params_abstract)
+    by_shape: dict[tuple, NamedSharding] = {}
+    for sh, aval in zip(flat_ps, flat_pa):
+        by_shape.setdefault(tuple(aval.shape), sh)
+
+    def _norm_spec(sh: NamedSharding, ndim: int) -> list:
+        parts = list(sh.spec)
+        parts += [None] * (ndim - len(parts))
+        return parts
+
+    def _fill_free_axes(spec: list, shape: tuple, mesh: Mesh) -> list:
+        """Assign mesh axes freed by the dropped (factored) dim to the largest
+        still-unsharded divisible dims (keeps Adafactor col-stats sharded)."""
+        used = set()
+        for s in spec:
+            for a in ((s,) if isinstance(s, str) else (s or ())):
+                used.add(a)
+        free = [a for a in mesh.axis_names if a not in used and mesh.shape[a] > 1]
+        order = sorted(range(len(shape)), key=lambda i: -shape[i])
+        for a in free:
+            for i in order:
+                if spec[i] is None and shape[i] % mesh.shape[a] == 0 and shape[i] >= mesh.shape[a]:
+                    spec[i] = a
+                    break
+        return spec
+
+    def one(aval):
+        shape = tuple(aval.shape)
+        if shape in by_shape:
+            return by_shape[shape]
+        # factored leaf: find a param whose shape prefix/suffix matches
+        for pshape, sh in by_shape.items():
+            parts = _norm_spec(sh, len(pshape))
+            if len(pshape) >= 2 and shape == pshape[:-1]:  # row stats
+                spec = _fill_free_axes(parts[:-1], shape, sh.mesh)
+                return NamedSharding(sh.mesh, P(*spec))
+            if len(pshape) >= 2 and shape == pshape[:-2] + pshape[-1:]:  # col stats
+                spec = _fill_free_axes(parts[:-2] + parts[-1:], shape, sh.mesh)
+                return NamedSharding(sh.mesh, P(*spec))
+        # scalars / unmatched: replicate
+        mesh0 = next(iter(by_shape.values())).mesh
+        return NamedSharding(mesh0, P())
+
+    return jax.tree.map(one, opt_abstract)
+
+
+def cache_shardings(cache_abstract: Any, cfg: ArchConfig, mesh: Mesh) -> Any:
+    """Shard decode caches: batch dim over (pod,data); kv-head dim over model
+    for attention caches when divisible; recurrent states similarly.
+
+    Stacked (scanned) caches have a leading num_superblocks dim -> replicated.
+    Heuristic by rank & position: every cache leaf's *batch* axis is either
+    dim0 (unstacked) or dim1 (stacked); we detect via matching cfg sizes."""
+    axes_dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = _axis_size(mesh, axes_dp)
+    tp = mesh.shape.get("model", 1)
+
+    def one(aval):
+        shape = aval.shape
+        parts: list = [None] * len(shape)
+        # find batch dim: first dim (or second if leading == num_superblocks)
+        bdim = 0
+        if len(shape) >= 2 and shape[0] == cfg.num_superblocks and cfg.num_superblocks > 1:
+            bdim = 1
+        if bdim < len(shape) and shape[bdim] % dp == 0 and dp > 1:
+            parts[bdim] = axes_dp if len(axes_dp) > 1 else axes_dp[0]
+        # shard the largest remaining dim over model if divisible
+        rest = [(d, i) for i, d in enumerate(shape) if i != bdim and parts[i] is None]
+        if rest and tp > 1:
+            d, i = max(rest)
+            if d % tp == 0 and d >= tp:
+                parts[i] = "model"
+        while parts and parts[-1] is None:
+            parts.pop()
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree.map(one, cache_abstract)

@@ -1,0 +1,2 @@
+from repro.kernels.arype_matmul.ops import arype_matmul, arype_matmul_unfused
+from repro.kernels.arype_matmul.ref import ref_matmul

@@ -1,0 +1,112 @@
+"""AryPE-path Pallas kernel: MXU-aligned blocked matmul with *fused* K-block
+accumulation in VMEM scratch.
+
+This is the TPU-native analogue of the paper's heterogeneous collaborative
+computing (§3.2.3): on the FPGA, AryPE streams (l,k)x(k,k) tiles while the
+VPE's vector unit aggregates partial blocks through an on-chip ping-pong
+buffer, so the systolic array never stalls.  On TPU the same property is
+obtained by carrying the partial block in a VMEM accumulator across the K grid
+dimension (``acc_ref``): partial blocks never round-trip to HBM, and Pallas's
+grid pipelining overlaps the next tile's HBM->VMEM copy with the current MXU
+pass (the ping-pong buffer).
+
+The *unfused* variant (`arype_matmul_unfused` in ops.py) reproduces the
+paper's "wo/ collaborating" ablation: every K-block partial is written back to
+HBM and aggregated in a separate pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mm_fused_kernel(x_ref, w_ref, o_ref, acc_ref, *, activation: str, n_k: int):
+    """grid = (M/bm, N/bn, K/bk); K innermost so acc_ref revolves in VMEM."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _epilogue():
+        out = acc_ref[...]
+        if activation == "relu":
+            out = jnp.maximum(out, 0.0)
+        elif activation == "silu":
+            out = out * jax.nn.sigmoid(out)
+        elif activation == "gelu":
+            out = jax.nn.gelu(out)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _mm_partial_kernel(x_ref, w_ref, o_ref):
+    """Unfused ablation: each (i, j, l) grid cell writes its own partial block
+    to HBM (out has a leading K-blocks dim); aggregation is a separate pass."""
+    o_ref[0, :, :] = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+def mm_fused(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    activation: str = "none",
+    out_dtype=None,
+    interpret: bool = True,
+) -> jax.Array:
+    """x: (M, K) @ w: (K, N) -> (M, N).  Dims must be multiples of the blocks
+    (ops.py pads).  ``interpret=True`` on CPU; on a real TPU pass False."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (x.shape, w.shape, bm, bn, bk)
+    n_k = k // bk
+    kernel = functools.partial(_mm_fused_kernel, activation=activation, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype or x.dtype),
+        scratch_shapes=[pl.MemorySpace.ANY((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)
+
+
+def mm_unfused_partials(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns partial blocks (K/bk, M, N) in fp32 — the 'wo/ collaborating'
+    ablation where block aggregation is a separate HBM pass."""
+    m, k = x.shape
+    _, n = w.shape
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    return pl.pallas_call(
+        _mm_partial_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda i, j, l: (l, i, j)),
+        out_shape=jax.ShapeDtypeStruct((k // bk, m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,38 @@
+"""Naive-attention oracle (materializes the full score matrix; test shapes only)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_attention(
+    q: jax.Array,  # (BH, Sq, D)
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    mask: str = "causal",
+    window: int = 0,
+    kv_len: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    kv_len = kv_len if kv_len is not None else sk
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32) * scale, k.astype(jnp.float32))
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    valid = kpos < kv_len
+    if mask == "causal":
+        valid &= qpos >= kpos
+    elif mask == "local":
+        valid &= (qpos >= kpos) & (qpos - kpos < window)
+    s = jnp.where(valid[None], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.where(valid[None], jnp.exp(s - m), 0.0)
+    l = p.sum(axis=-1, keepdims=True)
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = jnp.einsum("bqk,bkd->bqd", p / l, v.astype(jnp.float32))
+    return out.astype(q.dtype)

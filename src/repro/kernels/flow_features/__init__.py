@@ -1,0 +1,2 @@
+from repro.kernels.flow_features.ops import flow_feature_update, MICRO_OPS
+from repro.kernels.flow_features.ref import ref_flow_feature_update

@@ -1,0 +1,90 @@
+"""Flow-feature ALU-cluster Pallas kernel (paper §3.1).
+
+The FPGA feature extractor keeps an 8k-entry flow-state table; for each packet
+a 16-lane ALU cluster folds the packet's *meta register* into the flow's
+*history register* with per-lane micro-ops {nop, wr, add, sub, max, min, inc}.
+
+TPU adaptation: the whole flow-state table (8192 x 16 int32 = 512 KB) is VMEM
+resident; packets stream through the grid in blocks; within a block the kernel
+walks packets with ``fori_loop`` (updates to the same flow must be ordered —
+this is the inherently sequential part the FPGA pipelines at line rate).  The
+16 feature lanes update vectorized, mirroring the 16 parallel ALUs.
+
+Micro-op encoding per lane j (program row j = [opcode, meta_src, hist_src]):
+  0 nop : out = hist[hist_src]
+  1 wr  : out = meta[meta_src]
+  2 add : out = hist[hist_src] + meta[meta_src]
+  3 sub : out = hist[hist_src] - meta[meta_src]
+  4 max : out = max(hist[hist_src], meta[meta_src])
+  5 min : out = min(hist[hist_src], meta[meta_src])
+  6 inc : out = hist[hist_src] + 1
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+N_LANES = 16
+
+
+def apply_alu_program(program: jax.Array, meta: jax.Array, hist: jax.Array) -> jax.Array:
+    """Vectorized 16-lane ALU cluster.  program: (16, 3) int32; meta: (M,) int32;
+    hist: (16,) int32 -> new hist (16,) int32."""
+    opcode = program[:, 0]
+    a = jnp.take(meta, program[:, 1], axis=0)  # meta source per lane
+    b = jnp.take(hist, program[:, 2], axis=0)  # history source per lane
+    return jnp.select(
+        [opcode == 0, opcode == 1, opcode == 2, opcode == 3, opcode == 4, opcode == 5, opcode == 6],
+        [b, a, b + a, b - a, jnp.maximum(b, a), jnp.minimum(b, a), b + 1],
+        default=b,
+    ).astype(jnp.int32)
+
+
+def _flow_kernel(program_ref, slots_ref, meta_ref, init_state_ref, state_ref, *, block: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        state_ref[...] = init_state_ref[...]
+
+    program = program_ref[...]
+
+    def body(i, _):
+        slot = slots_ref[i]
+        hist = pl.load(state_ref, (pl.dslice(slot, 1), slice(None)))[0]
+        meta = meta_ref[i, :]
+        new = apply_alu_program(program, meta, hist)
+        pl.store(state_ref, (pl.dslice(slot, 1), slice(None)), new[None, :])
+        return 0
+
+    lax.fori_loop(0, block, body, 0)
+
+
+def flow_update(
+    program: jax.Array,  # (16, 3) int32
+    slots: jax.Array,  # (P,) int32 flow-table row per packet
+    meta: jax.Array,  # (P, M) int32 meta registers
+    init_state: jax.Array,  # (F, 16) int32 flow-state table
+    *,
+    block: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    p, m_width = meta.shape
+    f = init_state.shape[0]
+    assert p % block == 0, (p, block)
+    kernel = functools.partial(_flow_kernel, block=block)
+    return pl.pallas_call(
+        kernel,
+        grid=(p // block,),
+        in_specs=[
+            pl.BlockSpec((N_LANES, 3), lambda i: (0, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block, m_width), lambda i: (i, 0)),
+            pl.BlockSpec((f, N_LANES), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((f, N_LANES), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((f, N_LANES), jnp.int32),
+        interpret=interpret,
+    )(program, slots, meta, init_state)

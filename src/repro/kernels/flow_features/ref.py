@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the flow-feature ALU kernel: a lax.scan over packets."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.flow_features.flow_features import apply_alu_program
+
+
+def ref_flow_feature_update(
+    program: jax.Array, slots: jax.Array, meta: jax.Array, init_state: jax.Array
+) -> jax.Array:
+    def step(state, packet):
+        slot, m = packet
+        hist = state[slot]
+        new = apply_alu_program(program, m, hist)
+        return state.at[slot].set(new), None
+
+    state, _ = lax.scan(step, init_state, (slots, meta))
+    return state

@@ -1,0 +1,2 @@
+from repro.kernels.vpe_smallmm.ops import vpe_matmul
+from repro.kernels.vpe_smallmm.ref import ref_vpe_matmul

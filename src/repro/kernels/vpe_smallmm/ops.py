@@ -1,0 +1,34 @@
+"""Jit'd wrapper for the VPE small-matmul kernel: M-padding + block pick."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.util import round_up
+from repro.kernels.vpe_smallmm import vpe_smallmm as _k
+
+# VMEM working-set budget for the (bm, K, N) product tile, in fp32 elements.
+_VMEM_ELEMS = 1 << 20  # 4 MB
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "interpret", "out_dtype"))
+def vpe_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    activation: str = "none",
+    out_dtype=None,
+    interpret: bool = True,
+) -> jax.Array:
+    m, k = x.shape
+    _, n = w.shape
+    bm = max(8, min(256, _VMEM_ELEMS // max(k * n, 1)))
+    bm = max(8, (bm // 8) * 8)
+    mp = round_up(m, bm)
+    xp = jnp.pad(x, ((0, mp - m), (0, 0))) if mp != m else x
+    out = _k.vpe_mm(
+        xp, w, bm=bm, activation=activation, out_dtype=out_dtype or x.dtype, interpret=interpret
+    )
+    return out[:m]

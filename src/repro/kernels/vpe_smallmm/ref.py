@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the VPE small-matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_vpe_matmul(x: jax.Array, w: jax.Array, *, activation: str = "none", out_dtype=None) -> jax.Array:
+    out = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation == "silu":
+        out = out * jax.nn.sigmoid(out)
+    elif activation == "gelu":
+        out = jax.nn.gelu(out)
+    return out.astype(out_dtype or x.dtype)

@@ -1,0 +1,168 @@
+"""(arch x shape) cell definitions for the dry-run: abstract inputs
+(ShapeDtypeStructs — no allocation), step functions, and sharding assignments.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeSpec, get_config
+from repro.distributed import sharding as shd
+from repro.models.transformer import LM
+from repro.optim import cosine_schedule, make_optimizer
+from repro.train.steps import make_train_step
+
+
+def abstract_batch(cfg: ArchConfig, shape: ShapeSpec, *, with_labels: bool) -> dict:
+    b = shape.global_batch
+    s = 1 if shape.kind == "decode" else shape.seq_len
+    batch: dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.frontend == "audio_frames":
+        batch["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.frontend == "vision_patches":
+        batch["vision"] = jax.ShapeDtypeStruct((b, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    if with_labels:
+        batch["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return batch
+
+
+class Cell(NamedTuple):
+    label: str
+    fn: Callable
+    args: tuple  # abstract args
+    in_shardings: tuple
+    donate_argnums: tuple
+    model_flops: float  # analytic MODEL_FLOPS for the step
+    notes: str
+    cfg: Any = None
+
+
+def _param_count(abstract_params: Any) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(abstract_params))
+
+
+def active_param_count(cfg: ArchConfig, abstract_params: Any) -> int:
+    """Active params per token (MoE: only routed-in experts count)."""
+    total = _param_count(abstract_params)
+    if not cfg.num_experts:
+        return total
+    flat, _ = jax.tree.flatten_with_path(abstract_params)
+    expert_params = sum(
+        int(np.prod(leaf.shape)) for path, leaf in flat
+        if any(k in jax.tree_util.keystr(path) for k in ("w_gate", "w_up", "w_down"))
+        and "sh_" not in jax.tree_util.keystr(path)
+    )
+    frac = cfg.experts_per_token / cfg.num_experts
+    return int(total - expert_params + expert_params * frac)
+
+
+def model_flops_for(cfg: ArchConfig, shape: ShapeSpec, abstract_params: Any) -> float:
+    """6*N_active*D for train; 2*N_active*D for prefill; 2*N_active*B per
+    decode step (standard parameter-flops accounting; attention flops excluded,
+    reported separately in the roofline notes)."""
+    n_act = active_param_count(cfg, abstract_params)
+    if shape.kind == "train":
+        return 6.0 * n_act * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_act * shape.global_batch * shape.seq_len
+    return 2.0 * n_act * shape.global_batch  # decode: one token per sample
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, use_pallas: bool = False,
+               overrides: Optional[dict] = None,
+               analysis_nsb: Optional[int] = None) -> Cell:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    if analysis_nsb is not None:
+        # HLO-cost-analysis mode: unrolled layers + naive attention + unrolled
+        # chunk scans, truncated to `analysis_nsb` superblocks.  Total cost is
+        # extrapolated as base + (NSB-1) * (cost(2) - cost(1)) by the caller.
+        cfg = cfg.replace(
+            scan_layers=False,
+            attn_impl="blockwise",  # production impl, chunk scans unrolled
+            inner_unroll=True,
+            num_superblocks=analysis_nsb,
+        )
+    shape = SHAPES[shape_name]
+    model = LM(cfg)
+    specs = model.specs()
+    from repro.models.spec import abstract_params as abst, logical_axes
+
+    params_abs = abst(specs)
+    axes = logical_axes(specs)
+    report: list = []
+    param_sh = shd.shardings_for(axes, params_abs, cfg, mesh, report)
+    mflops = model_flops_for(cfg, shape, params_abs)
+    notes = "; ".join(f"{n}:{d} {a} {msg}" for n, d, a, msg in report[:8])
+
+    if shape.kind == "train":
+        batch_abs = abstract_batch(cfg, shape, with_labels=True)
+        batch_sh = shd.input_shardings(mesh, batch_abs, cfg)
+        lr = cosine_schedule(3e-4, 100, 10_000)
+        opt = make_optimizer(cfg.optimizer, lr)
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        opt_sh = shd.opt_shardings(param_sh, params_abs, opt_abs)
+        step_fn = make_train_step(cfg, opt)
+        step_abs = jax.ShapeDtypeStruct((), jnp.int32)
+        return Cell(
+            label=f"{arch}/{shape_name}",
+            fn=step_fn,
+            args=(params_abs, opt_abs, step_abs, batch_abs),
+            in_shardings=(param_sh, opt_sh, None, batch_sh),
+            donate_argnums=(0, 1),
+            model_flops=mflops,
+            notes=notes,
+            cfg=cfg,
+        )
+
+    cache_len = shape.seq_len
+    batch_abs = abstract_batch(cfg, shape, with_labels=False)
+    batch_sh = shd.input_shardings(mesh, batch_abs, cfg)
+    cache_abs = jax.eval_shape(
+        functools.partial(model.init_cache, shape.global_batch, cache_len)
+    )
+    cache_sh = shd.cache_shardings(cache_abs, cfg, mesh)
+
+    if shape.kind == "prefill":
+        fn = model.prefill
+        return Cell(
+            label=f"{arch}/{shape_name}",
+            fn=fn,
+            args=(params_abs, batch_abs, cache_abs),
+            in_shardings=(param_sh, batch_sh, cache_sh),
+            donate_argnums=(2,),
+            model_flops=mflops,
+            notes=notes,
+            cfg=cfg,
+        )
+
+    fn = model.decode_step
+    return Cell(
+        label=f"{arch}/{shape_name}",
+        fn=fn,
+        args=(params_abs, batch_abs, cache_abs),
+        in_shardings=(param_sh, batch_sh, cache_sh),
+        donate_argnums=(2,),
+        model_flops=mflops,
+        notes=notes,
+        cfg=cfg,
+    )
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """Every (arch, shape) pair that applies (skips documented in DESIGN.md)."""
+    from repro.configs import list_archs
+
+    out = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape_name in cfg.shape_cells():
+            out.append((arch, shape_name))
+    return out

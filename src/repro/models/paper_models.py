@@ -1,0 +1,170 @@
+"""The paper's own use-case models (§4.2), built on the routed compute core.
+
+  * Use-case 1: packet-based MLP for intrusion detection [40]:
+      6 -> 12 -> 6 -> 3 -> 2, ReLU; input = per-packet features.
+  * Use-case 2: flow-based 1D-CNN traffic classifier [51]:
+      3 conv layers {k=3, c: 1->32->32->32} with ceil max-pool stride 2
+      between, flatten -> FC 128 -> linear 162; input = top-20 arrival
+      intervals of a flow.
+  * Use-case 3: flow-based payload transformer [49]:
+      payload matrix (15 pkts x 16 bytes), WQ/WK/WV (16,64), single-head
+      self-attention, MLP 64->128->64, mean-pool -> linear classifier.
+
+All matmuls go through the Octopus router; conv layers are lowered via
+img2col so the placement matches the paper's matrix-multiplication mapping
+exactly ((20f,3)x(3,32), (10f,96)x(96,32), ...).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.util import ceil_div, fold_in_str
+from repro.core import router
+from repro.models.spec import ParamSpec, init_params, logical_axes
+
+
+# ---------------------------------------------------------------------------
+# Use-case 1: packet MLP (6 -> 12 -> 6 -> 3 -> 2)
+# ---------------------------------------------------------------------------
+
+MLP_DIMS = (6, 12, 6, 3, 2)
+
+
+def mlp_specs() -> dict:
+    specs = {}
+    for i, (a, b) in enumerate(zip(MLP_DIMS[:-1], MLP_DIMS[1:])):
+        specs[f"w{i}"] = ParamSpec((a, b), (None, None), "normal")
+        specs[f"b{i}"] = ParamSpec((b,), (None,), "zeros")
+    return specs
+
+
+def mlp_apply(params: dict, x: jax.Array, *, policy: str = "collaborative",
+              use_pallas: bool = False) -> jax.Array:
+    h = x
+    n = len(MLP_DIMS) - 1
+    for i in range(n):
+        act = "relu" if i < n - 1 else None
+        h = router.matmul(h, params[f"w{i}"], policy=policy, activation=None,
+                          use_pallas=use_pallas) + params[f"b{i}"]
+        if act == "relu":
+            h = jnp.maximum(h, 0.0)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Use-case 2: flow 1D-CNN (matmul mapping per paper §3.2.3 / §4.2)
+# ---------------------------------------------------------------------------
+
+CNN_SEQ = 20  # top-20 packet arrival intervals
+CNN_CHANNELS = (1, 32, 32, 32)
+CNN_KERNEL = 3
+CNN_FC = 128
+CNN_CLASSES = 162
+
+
+def _img2col_1d(x: jax.Array, k: int) -> jax.Array:
+    """x: (..., L, C) -> (..., L, k*C) with 'same' zero padding (stride 1)."""
+    pad = k // 2
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 2) + [(pad, pad), (0, 0)])
+    cols = [xp[..., i : i + x.shape[-2], :] for i in range(k)]
+    return jnp.concatenate(cols, axis=-1)
+
+
+def _ceil_pool(x: jax.Array, stride: int = 2) -> jax.Array:
+    """Max-pool stride 2 with ceil semantics (paper: 20->10->5->3)."""
+    l = x.shape[-2]
+    lp = ceil_div(l, stride) * stride
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 2) + [(0, lp - l), (0, 0)],
+                 constant_values=-np.inf)
+    return xp.reshape(*x.shape[:-2], lp // stride, stride, x.shape[-1]).max(axis=-2)
+
+
+def cnn_specs() -> dict:
+    specs = {}
+    for i, (ci, co) in enumerate(zip(CNN_CHANNELS[:-1], CNN_CHANNELS[1:])):
+        specs[f"conv{i}"] = ParamSpec((CNN_KERNEL * ci, co), (None, None), "normal")
+        specs[f"convb{i}"] = ParamSpec((co,), (None,), "zeros")
+    flat = 3 * CNN_CHANNELS[-1]  # 20 -> 10 -> 5 -> 3 after three ceil-pools
+    specs["fc_w"] = ParamSpec((flat, CNN_FC), (None, None), "normal")
+    specs["fc_b"] = ParamSpec((CNN_FC,), (None,), "zeros")
+    specs["out_w"] = ParamSpec((CNN_FC, CNN_CLASSES), (None, None), "normal")
+    specs["out_b"] = ParamSpec((CNN_CLASSES,), (None,), "zeros")
+    return specs
+
+
+def cnn_apply(params: dict, x: jax.Array, *, policy: str = "collaborative",
+              use_pallas: bool = False, fused_aggregation: bool = True) -> jax.Array:
+    """x: (F, 20) interval vectors -> logits (F, 162)."""
+    from repro.core.collaborative import _unfused_jnp
+
+    h = x[..., :, None].astype(jnp.float32)  # (F, 20, 1)
+    for i in range(len(CNN_CHANNELS) - 1):
+        cols = _img2col_1d(h, CNN_KERNEL)  # (F, L, k*ci) == the paper's (w, ic*s)
+        w = params[f"conv{i}"]
+        if fused_aggregation:
+            h = router.matmul(cols, w, policy=policy, use_pallas=use_pallas)
+        else:
+            m = int(np.prod(cols.shape[:-1]))
+            r = router.route_matmul(m, w.shape[0], w.shape[1], policy=policy)
+            h = (_unfused_jnp(cols, w, None) if r.path == "arype"
+                 else router.matmul(cols, w, policy=policy))
+        h = jnp.maximum(h + params[f"convb{i}"], 0.0)
+        h = _ceil_pool(h)
+    h = h.reshape(h.shape[0], -1)  # (F, 96)
+    h = jnp.maximum(
+        router.matmul(h, params["fc_w"], policy=policy, use_pallas=use_pallas)
+        + params["fc_b"], 0.0)
+    return router.matmul(h, params["out_w"], policy=policy,
+                         use_pallas=use_pallas) + params["out_b"]
+
+
+# ---------------------------------------------------------------------------
+# Use-case 3: payload transformer
+# ---------------------------------------------------------------------------
+
+TF_PKTS = 15
+TF_BYTES = 16
+TF_DK = 64
+TF_MLP = 128
+TF_CLASSES = 162
+
+
+def transformer_specs() -> dict:
+    return {
+        "wq": ParamSpec((TF_BYTES, TF_DK), (None, None), "normal"),
+        "wk": ParamSpec((TF_BYTES, TF_DK), (None, None), "normal"),
+        "wv": ParamSpec((TF_BYTES, TF_DK), (None, None), "normal"),
+        "mlp1": ParamSpec((TF_DK, TF_MLP), (None, None), "normal"),
+        "mlp1_b": ParamSpec((TF_MLP,), (None,), "zeros"),
+        "mlp2": ParamSpec((TF_MLP, TF_DK), (None, None), "normal"),
+        "mlp2_b": ParamSpec((TF_DK,), (None,), "zeros"),
+        "cls_w": ParamSpec((TF_DK, TF_CLASSES), (None, None), "normal"),
+        "cls_b": ParamSpec((TF_CLASSES,), (None,), "zeros"),
+    }
+
+
+def transformer_apply(params: dict, payload: jax.Array, *, policy: str = "collaborative",
+                      use_pallas: bool = False) -> jax.Array:
+    """payload: (F, 15, 16) normalized byte matrix -> logits (F, 162)."""
+    mm = functools.partial(router.matmul, policy=policy, use_pallas=use_pallas)
+    x = payload.astype(jnp.float32)
+    q = mm(x, params["wq"])  # (F,15,64)   [(15,16)x(16,64)]
+    k = mm(x, params["wk"])
+    v = mm(x, params["wv"])
+    s = jnp.einsum("fqd,fkd->fqk", q, k) / np.sqrt(TF_DK)  # [(15,64)x(64,15)]
+    a = jax.nn.softmax(s, axis=-1)
+    h = jnp.einsum("fqk,fkd->fqd", a, v)  # [(15,15)x(15,64)]
+    h = jnp.maximum(mm(h, params["mlp1"]) + params["mlp1_b"], 0.0)
+    h = mm(h, params["mlp2"]) + params["mlp2_b"]
+    pooled = h.mean(axis=1)
+    return mm(pooled, params["cls_w"]) + params["cls_b"]
+
+
+def init_paper_model(kind: str, key: jax.Array) -> dict:
+    specs = {"mlp": mlp_specs, "cnn": cnn_specs, "transformer": transformer_specs}[kind]()
+    return init_params(specs, key)

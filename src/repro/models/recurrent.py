@@ -1,0 +1,391 @@
+"""Recurrent mixers: Mamba-2 (SSD, chunked), xLSTM mLSTM (chunkwise-parallel,
+log-space stabilized) and sLSTM (sequential scan).
+
+All follow the same interface as attention layers:
+  *_specs(cfg)                        parameter spec tree
+  *_apply(p, x, cfg, mode, cache)     -> (y, new_cache)
+Caches are fixed-size recurrent states, so decode is O(1) per token — this is
+what makes the long_500k cell runnable for the ssm/hybrid archs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.common.util import ceil_div
+from repro.configs.base import ArchConfig
+from repro.core import router
+from repro.distributed.act import shard_act
+from repro.models.layers import rms_norm
+from repro.models.spec import ParamSpec
+
+
+# ===========================================================================
+# Mamba-2 (SSD)
+# ===========================================================================
+
+class Mamba2Cache(NamedTuple):
+    ssm: jax.Array  # (B, H, N, P) state
+    conv: jax.Array  # (B, W-1, conv_dim) rolling conv inputs
+
+
+def mamba2_specs(cfg: ArchConfig) -> dict:
+    dt = cfg.param_dtype
+    d = cfg.d_model
+    din = cfg.ssm_d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    conv_dim = din + 2 * n
+    in_dim = 2 * din + 2 * n + h  # z, x, B, C, dt
+    return {
+        "ln": ParamSpec((d,), ("embed",), "zeros", dtype=dt),
+        "in_proj": ParamSpec((d, in_dim), ("embed", "ssm_inner"), "normal", dtype=dt),
+        "conv_w": ParamSpec((cfg.ssm_conv_width, conv_dim), (None, "ssm_inner"), "small_normal", dtype=dt),
+        "conv_b": ParamSpec((conv_dim,), ("ssm_inner",), "zeros", dtype=dt),
+        "a_log": ParamSpec((h,), (None,), "mamba_alog", dtype="float32"),
+        "d_skip": ParamSpec((h,), (None,), "ones", dtype="float32"),
+        "dt_bias": ParamSpec((h,), (None,), "mamba_dt", dtype="float32"),
+        "norm": ParamSpec((din,), ("ssm_inner",), "zeros", dtype=dt),
+        "out_proj": ParamSpec((din, d), ("ssm_inner", "embed"), "normal", dtype=dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv along S.  x: (B,S,C); w: (W,C).  Returns (y, new_state)."""
+    bsz, s, c = x.shape
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((bsz, width - 1, c), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # (B, S+W-1, C)
+    y = jnp.zeros((bsz, s, c), jnp.float32)
+    for i in range(width):
+        y = y + xp[:, i : i + s, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    y = jax.nn.silu(y + b.astype(jnp.float32))
+    new_state = xp[:, -(width - 1):, :] if width > 1 else state
+    return y.astype(x.dtype), new_state
+
+
+def _ssd_chunked(xh, dt, a, b_in, c_in, chunk: int, state0: jax.Array,
+                 unroll: bool = False):
+    """Chunked state-space-duality scan.
+    xh: (B,S,H,P); dt: (B,S,H) (post-softplus); a: (H,) negative;
+    b_in/c_in: (B,S,N).  Returns (y (B,S,H,P), final_state (B,H,N,P))."""
+    bsz, s, h, p = xh.shape
+    n = b_in.shape[-1]
+    L = min(chunk, s)
+    nc = ceil_div(s, L)
+    pad = nc * L - s
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+    xc = xh.reshape(bsz, nc, L, h, p)
+    dtc = dt.reshape(bsz, nc, L, h)
+    bc = b_in.reshape(bsz, nc, L, n)
+    cc = c_in.reshape(bsz, nc, L, n)
+
+    da = dtc * a[None, None, None, :]  # (B,nc,L,H) negative decay increments
+    cum = jnp.cumsum(da, axis=2)  # inclusive cumsum within chunk
+    total = cum[:, :, -1:, :]  # (B,nc,1,H)
+
+    # within-chunk (diagonal) part: att[t,s] = exp(cum_t - cum_s) * (c_t . b_s) * dt_s,  s <= t
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,L,L,H)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    cb = jnp.einsum("bcln,bcmn->bclm", cc, bc)  # (B,nc,L,L)
+    att = cb[..., None] * decay * dtc[:, :, None, :, :]
+    att = jnp.where(tri[None, None, :, :, None], att, 0.0)
+    y_diag = jnp.einsum("bclmh,bcmhp->bclhp", att, xc.astype(jnp.float32))
+
+    # per-chunk outgoing state: sum_s exp(total - cum_s) * dt_s * b_s (x) x_s
+    w_out = jnp.exp(total - cum) * dtc  # (B,nc,L,H)
+    chunk_states = jnp.einsum("bclh,bcln,bclhp->bchnp", w_out, bc, xc.astype(jnp.float32))
+
+    # inter-chunk recurrence over nc
+    def step(carry, inp):
+        st_in = carry  # (B,H,N,P)
+        cs, tot = inp  # (B,H,N,P), (B,H)
+        st_out = jnp.exp(tot)[:, :, None, None] * st_in + cs
+        return st_out, st_in  # emit the INCOMING state for each chunk
+
+    totals = jnp.moveaxis(total[:, :, 0, :], 1, 0)  # (nc, B, H)
+    cs_seq = jnp.moveaxis(chunk_states, 1, 0)  # (nc, B, H, N, P)
+    final_state, in_states = lax.scan(step, state0, (cs_seq, totals),
+                                      unroll=True if unroll else 1)
+    in_states = jnp.moveaxis(in_states, 0, 1)  # (B, nc, H, N, P)
+
+    # contribution of the incoming state to each position
+    y_off = jnp.einsum("bcln,bclh,bchnp->bclhp", cc, jnp.exp(cum), in_states)
+    y = (y_diag + y_off).reshape(bsz, nc * L, h, p)[:, :s]
+    return y, final_state
+
+
+def mamba2_apply(
+    p: dict, x: jax.Array, cfg: ArchConfig, *, mode: str = "train",
+    cache: Optional[Mamba2Cache] = None,
+) -> tuple[jax.Array, Optional[Mamba2Cache]]:
+    bsz, s, d = x.shape
+    din, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    pdim = cfg.ssm_head_dim
+    mm = functools.partial(router.matmul, policy=cfg.router_policy, out_dtype=x.dtype)
+    hin = rms_norm(x, p["ln"])
+    proj = mm(hin, p["in_proj"])
+    z, xs, b_in, c_in, dt = jnp.split(proj, [din, 2 * din, 2 * din + n, 2 * din + 2 * n], axis=-1)
+
+    conv_in = jnp.concatenate([xs, b_in, c_in], axis=-1)
+    conv_state = cache.conv if cache is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"], conv_state)
+    xs, b_in, c_in = jnp.split(conv_out, [din, din + n], axis=-1)
+    xs = shard_act(xs, "batch", None, "inner")
+
+    a = -jnp.exp(p["a_log"])  # (H,)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    xh = shard_act(xs.reshape(bsz, s, h, pdim), "batch", None, "heads", None)
+
+    state0 = cache.ssm if cache is not None else jnp.zeros((bsz, h, n, pdim), jnp.float32)
+    state0 = shard_act(state0, "batch", "heads", None, None)
+    if mode == "decode" and s == 1:
+        # single-step recurrence
+        da = jnp.exp(dtp[:, 0, :] * a[None, :])  # (B,H)
+        dbx = jnp.einsum("bh,bn,bhp->bhnp", dtp[:, 0], b_in[:, 0].astype(jnp.float32),
+                         xh[:, 0].astype(jnp.float32))
+        st = da[:, :, None, None] * state0 + dbx
+        y = jnp.einsum("bn,bhnp->bhp", c_in[:, 0].astype(jnp.float32), st)
+        y = y[:, None]  # (B,1,H,P)
+        new_state = st
+    else:
+        y, new_state = _ssd_chunked(xh, dtp, a, b_in.astype(jnp.float32),
+                                    c_in.astype(jnp.float32), cfg.ssm_chunk, state0,
+                                    unroll=cfg.inner_unroll)
+    y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, din).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), p["norm"])
+    out = x + mm(y, p["out_proj"])
+    new_cache = Mamba2Cache(ssm=new_state, conv=new_conv) if mode != "train" else None
+    return out, new_cache
+
+
+def init_mamba2_cache(cfg: ArchConfig, batch: int) -> Mamba2Cache:
+    conv_dim = cfg.ssm_d_inner + 2 * cfg.ssm_state
+    return Mamba2Cache(
+        ssm=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), jnp.bfloat16),
+    )
+
+
+# ===========================================================================
+# xLSTM: mLSTM (matrix memory, chunkwise-parallel)
+# ===========================================================================
+
+class MLSTMCache(NamedTuple):
+    c: jax.Array  # (B, H, DK, DV) stabilized matrix memory
+    n: jax.Array  # (B, H, DK) normalizer
+    m: jax.Array  # (B, H) log-space stabilizer
+
+
+def mlstm_specs(cfg: ArchConfig) -> dict:
+    dt = cfg.param_dtype
+    d = cfg.d_model
+    din = cfg.mlstm_d_inner
+    h = cfg.num_heads
+    dk = din // h
+    return {
+        "ln": ParamSpec((d,), ("embed",), "zeros", dtype=dt),
+        "w_up": ParamSpec((d, 2 * din), ("embed", "mlstm_inner"), "normal", dtype=dt),
+        # headwise (block-diagonal) q/k projections, as in the xLSTM paper
+        "wq": ParamSpec((h, dk, dk), (None, "mlstm_qk", None), "normal", dtype=dt),
+        "wk": ParamSpec((h, dk, dk), (None, "mlstm_qk", None), "normal", dtype=dt),
+        "w_if": ParamSpec((din, 2 * h), ("mlstm_inner", None), "small_normal", dtype="float32"),
+        "if_bias": ParamSpec((2 * h,), (None,), "zeros", dtype="float32"),
+        "mnorm": ParamSpec((din,), ("mlstm_inner",), "zeros", dtype=dt),
+        "w_down": ParamSpec((din, d), ("mlstm_inner", "embed"), "normal", dtype=dt),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, ig, lf, chunk: int, cache: MLSTMCache,
+                      unroll: bool = False):
+    """Chunkwise-parallel stabilized mLSTM.
+    q,k,v: (B,S,H,D); ig: (B,S,H) raw input-gate preact; lf: (B,S,H)
+    log-sigmoid forget gate.  Returns (h (B,S,H,D), new cache)."""
+    bsz, s, h, dk = q.shape
+    dv = v.shape[-1]
+    L = min(chunk, s)
+    nc = ceil_div(s, L)
+    pad = nc * L - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        ig = jnp.pad(ig, ((0, 0), (0, pad), (0, 0)), constant_values=-1e9)
+        lf = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)))
+    shp = (bsz, nc, L)
+    qc = q.reshape(*shp, h, dk).astype(jnp.float32) / np.sqrt(dk)
+    kc = k.reshape(*shp, h, dk).astype(jnp.float32)
+    vc = v.reshape(*shp, h, dv).astype(jnp.float32)
+    igc = ig.reshape(*shp, h)
+    lfc = lf.reshape(*shp, h)
+
+    bcum = jnp.cumsum(lfc, axis=2)  # (B,nc,L,H) inclusive log-decay
+    btot = bcum[:, :, -1, :]  # (B,nc,H)
+    u = igc - bcum  # source term in log space
+    ucmax = lax.cummax(u, axis=2)  # (B,nc,L,H)
+
+    def chunk_step(carry, inp):
+        c_in, n_in, m_in = carry  # (B,H,DK,DV), (B,H,DK), (B,H)
+        qj, kj, vj, bj, uj, ujmax, btj = inp
+        # per-position stabilizer: mq_t = b_t + max(m_in, cummax_s<=t u_s)
+        mq = bj + jnp.maximum(m_in[:, None, :], ujmax)  # (B,L,H)
+        # intra-chunk gate matrix: exp(b_t - b_s + i_s - mq_t) for s <= t
+        glog = bj[:, :, None, :] + uj[:, None, :, :] - mq[:, :, None, :]
+        tri = jnp.tril(jnp.ones((bj.shape[1], bj.shape[1]), bool))
+        gmat = jnp.where(tri[None, :, :, None], jnp.exp(glog), 0.0)  # (B,L,L,H)
+        scores = jnp.einsum("blhd,bmhd->blmh", qj, kj) * gmat
+        num_intra = jnp.einsum("blmh,bmhp->blhp", scores, vj)
+        den_intra = scores.sum(axis=2)  # (B,L,H): sum_s gate[t,s] * (q_t . k_s)
+        # inter (incoming state) contribution, scaled exp(b_t + m_in - mq_t)
+        w_in = jnp.exp(bj + m_in[:, None, :] - mq)  # (B,L,H)
+        num_inter = jnp.einsum("blhd,bhdp->blhp", qj, c_in) * w_in[..., None]
+        den_inter = jnp.einsum("blhd,bhd->blh", qj, n_in) * w_in
+        num = num_intra + num_inter
+        den = den_intra + den_inter
+        hj = num / jnp.maximum(jnp.abs(den), jnp.exp(-mq))[..., None]
+        # chunk-exit state
+        m_out = btj + jnp.maximum(m_in, ujmax[:, -1, :])  # (B,H)
+        # exp(btot - b_s + i_s - m_out) == exp(btot + u_s - m_out)
+        w_state = jnp.exp(btj[:, None, :] + uj - m_out[:, None, :])
+        c_out = (jnp.exp(btj + m_in - m_out)[:, :, None, None] * c_in
+                 + jnp.einsum("blh,blhd,blhp->bhdp", w_state, kj, vj))
+        n_out = (jnp.exp(btj + m_in - m_out)[:, :, None] * n_in
+                 + jnp.einsum("blh,blhd->bhd", w_state, kj))
+        return (c_out, n_out, m_out), hj
+
+    xs = (
+        jnp.moveaxis(qc, 1, 0), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+        jnp.moveaxis(bcum, 1, 0), jnp.moveaxis(u, 1, 0), jnp.moveaxis(ucmax, 1, 0),
+        jnp.moveaxis(btot, 1, 0),
+    )
+    carry0 = (shard_act(cache.c, "batch", None, "inner", None),
+              shard_act(cache.n, "batch", None, "inner"),
+              cache.m)
+    (c_f, n_f, m_f), hs = lax.scan(chunk_step, carry0, xs,
+                                   unroll=True if unroll else 1)
+    hs = jnp.moveaxis(hs, 0, 1).reshape(bsz, nc * L, h, dv)[:, :s]
+    return hs, MLSTMCache(c=c_f, n=n_f, m=m_f)
+
+
+def mlstm_apply(
+    p: dict, x: jax.Array, cfg: ArchConfig, *, mode: str = "train",
+    cache: Optional[MLSTMCache] = None,
+) -> tuple[jax.Array, Optional[MLSTMCache]]:
+    bsz, s, d = x.shape
+    din, h = cfg.mlstm_d_inner, cfg.num_heads
+    dk = din // h
+    mm = functools.partial(router.matmul, policy=cfg.router_policy, out_dtype=x.dtype)
+    hin = rms_norm(x, p["ln"])
+    up = mm(hin, p["w_up"])
+    xs, z = jnp.split(up, 2, axis=-1)  # cell path, gate path
+    xs = shard_act(xs, "batch", None, "inner")
+    xh = xs.reshape(bsz, s, h, dk)
+    # no explicit constraint on q/k: propagation from the 16-way inner dim
+    # factors naturally into (heads x dk) tiles; forcing dk-only sharding
+    # triggers involuntary full rematerialization in the partitioner
+    q = jnp.einsum("bshd,hde->bshe", xh, p["wq"]).astype(x.dtype)
+    k = jnp.einsum("bshd,hde->bshe", xh, p["wk"]).astype(x.dtype)
+    v = xh
+    gates = jnp.einsum("bsd,dg->bsg", xs.astype(jnp.float32), p["w_if"]) + p["if_bias"]
+    ig, fg = jnp.split(gates, 2, axis=-1)  # (B,S,H) each
+    lf = jax.nn.log_sigmoid(fg)
+
+    c0 = cache if cache is not None else init_mlstm_cache(cfg, bsz)
+    hs, new_cache = _mlstm_chunk_scan(q, k, v, ig, lf, cfg.ssm_chunk or 256, c0,
+                                      unroll=cfg.inner_unroll)
+    hs = hs.reshape(bsz, s, din).astype(x.dtype)
+    hs = rms_norm(hs, p["mnorm"]) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = x + mm(hs, p["w_down"])
+    return out, (new_cache if mode != "train" else None)
+
+
+def init_mlstm_cache(cfg: ArchConfig, batch: int) -> MLSTMCache:
+    din, h = cfg.mlstm_d_inner, cfg.num_heads
+    dk = din // h
+    return MLSTMCache(
+        c=jnp.zeros((batch, h, dk, dk), jnp.float32),
+        n=jnp.zeros((batch, h, dk), jnp.float32),
+        m=jnp.full((batch, h), -1e30, jnp.float32),
+    )
+
+
+# ===========================================================================
+# xLSTM: sLSTM (scalar memory, sequential)
+# ===========================================================================
+
+class SLSTMCache(NamedTuple):
+    c: jax.Array  # (B, H, D)
+    n: jax.Array  # (B, H, D)
+    m: jax.Array  # (B, H, D)
+    h: jax.Array  # (B, H, D) hidden (recurrent input)
+
+
+def slstm_specs(cfg: ArchConfig) -> dict:
+    dt = cfg.param_dtype
+    d = cfg.d_model
+    h = cfg.num_heads
+    hd = d // h
+    return {
+        "ln": ParamSpec((d,), ("embed",), "zeros", dtype=dt),
+        "w_gates": ParamSpec((d, 4 * d), ("embed", "slstm_gates"), "normal", dtype=dt),
+        "r_gates": ParamSpec((h, hd, 4 * hd), (None, None, None), "small_normal", dtype="float32"),
+        "gnorm": ParamSpec((d,), ("embed",), "zeros", dtype=dt),
+        "w_down": ParamSpec((d, d), ("embed", "embed_out"), "normal", dtype=dt),
+    }
+
+
+def _slstm_cell(wx_t, r, st: SLSTMCache):
+    """wx_t: (B, H, 4*HD) input contributions; r: (H, HD, 4HD)."""
+    rec = jnp.einsum("bhd,hdg->bhg", st.h, r)  # (B,H,4HD)
+    pre = wx_t.astype(jnp.float32) + rec
+    hd = st.c.shape[-1]
+    i_raw, f_raw, z_raw, o_raw = jnp.split(pre, 4, axis=-1)
+    m_new = jnp.maximum(jax.nn.log_sigmoid(f_raw) + st.m, i_raw)
+    i_g = jnp.exp(i_raw - m_new)
+    f_g = jnp.exp(jax.nn.log_sigmoid(f_raw) + st.m - m_new)
+    c_new = f_g * st.c + i_g * jnp.tanh(z_raw)
+    n_new = f_g * st.n + i_g
+    h_new = jax.nn.sigmoid(o_raw) * c_new / jnp.maximum(n_new, 1.0)
+    return SLSTMCache(c=c_new, n=n_new, m=m_new, h=h_new)
+
+
+def slstm_apply(
+    p: dict, x: jax.Array, cfg: ArchConfig, *, mode: str = "train",
+    cache: Optional[SLSTMCache] = None,
+) -> tuple[jax.Array, Optional[SLSTMCache]]:
+    bsz, s, d = x.shape
+    h = cfg.num_heads
+    hd = d // h
+    mm = functools.partial(router.matmul, policy=cfg.router_policy, out_dtype=x.dtype)
+    hin = rms_norm(x, p["ln"])
+    wx = mm(hin, p["w_gates"]).reshape(bsz, s, h, 4 * hd)
+    st0 = cache if cache is not None else init_slstm_cache(cfg, bsz)
+
+    def step(st, wx_t):
+        st1 = _slstm_cell(wx_t, p["r_gates"], st)
+        return st1, st1.h
+
+    st_f, hs = lax.scan(step, st0, jnp.moveaxis(wx, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(bsz, s, d).astype(x.dtype)
+    hs = rms_norm(hs, p["gnorm"])
+    out = x + mm(hs, p["w_down"])
+    return out, (st_f if mode != "train" else None)
+
+
+def init_slstm_cache(cfg: ArchConfig, batch: int) -> SLSTMCache:
+    h = cfg.num_heads
+    hd = cfg.d_model // h
+    z = jnp.zeros((batch, h, hd), jnp.float32)
+    return SLSTMCache(c=z, n=z, m=jnp.full_like(z, -1e30), h=z)

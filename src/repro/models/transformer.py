@@ -1,0 +1,373 @@
+"""The generic LM assembly: embed -> head layers -> scan(superblock) -> tail
+layers -> final norm -> lm head, with train / prefill / decode entry points.
+
+Every assigned architecture is an instance of this framework (see
+repro/configs/*.py); heterogeneous depth patterns (gemma3's 5:1 local:global,
+llama-vision's 4:1 self:cross, zamba2's 5:1 mamba:shared-attn, xlstm's 7:1
+mLSTM:sLSTM) are expressed as superblock patterns so the scan body stays
+uniform and HLO size is ~constant in depth.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.common.util import fold_in_str
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.core import router
+from repro.distributed.act import shard_act
+from repro.models import recurrent as rec
+from repro.models import spec as pspec
+from repro.models.layers import (
+    AttnCache,
+    attn_apply,
+    attn_specs,
+    init_attn_cache,
+    mlp_apply,
+    mlp_specs,
+    moe_apply,
+    moe_specs,
+    rms_norm,
+)
+from repro.models.spec import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+def layer_specs(cfg: ArchConfig, spec: LayerSpec, *, d_ff_override: Optional[int] = None) -> dict:
+    out: dict = {}
+    if spec.mixer in ("attn", "attn_local"):
+        out["mixer"] = attn_specs(cfg)
+    elif spec.mixer == "attn_cross":
+        out["mixer"] = attn_specs(cfg, cross=True)
+    elif spec.mixer == "mamba2":
+        out["mixer"] = rec.mamba2_specs(cfg)
+    elif spec.mixer == "mlstm":
+        out["mixer"] = rec.mlstm_specs(cfg)
+    elif spec.mixer == "slstm":
+        out["mixer"] = rec.slstm_specs(cfg)
+    elif spec.mixer in ("attn_shared", "none"):
+        out["mixer"] = {}  # params live in the shared group / absent
+    if spec.ffn == "mlp":
+        out["ffn"] = mlp_specs(cfg, d_ff_override)
+    elif spec.ffn == "moe":
+        out["ffn"] = moe_specs(cfg)
+    elif spec.ffn in ("mlp_shared", "none"):
+        out["ffn"] = {}
+    return out
+
+
+def _uses_shared(cfg: ArchConfig) -> bool:
+    return any(
+        l.mixer == "attn_shared" or l.ffn == "mlp_shared" for l in cfg.all_layers()
+    )
+
+
+def superblock_specs(cfg: ArchConfig) -> dict:
+    return {f"l{i}": layer_specs(cfg, s) for i, s in enumerate(cfg.block_pattern)}
+
+
+def model_specs(cfg: ArchConfig) -> dict:
+    dt = cfg.param_dtype
+    d, v = cfg.d_model, cfg.padded_vocab
+    specs: dict = {}
+    if cfg.frontend != "audio_frames":
+        specs["embed"] = ParamSpec((v, d), ("vocab", "embed"), "small_normal", dtype=dt)
+    for i, s in enumerate(cfg.head_pattern):
+        specs[f"pre{i}"] = layer_specs(cfg, s, d_ff_override=cfg.first_dense_ff or None)
+    specs["blocks"] = pspec.stack_specs(superblock_specs(cfg), cfg.num_superblocks)
+    for i, s in enumerate(cfg.tail_pattern):
+        specs[f"tail{i}"] = layer_specs(cfg, s)
+    if _uses_shared(cfg):
+        shared: dict = {}
+        shared["mixer"] = attn_specs(cfg)
+        shared["ffn"] = mlp_specs(cfg)
+        specs["shared"] = shared
+    specs["final_norm"] = ParamSpec((d,), ("embed",), "zeros", dtype=dt)
+    specs["lm_head"] = ParamSpec((d, v), ("embed", "vocab"), "small_normal", dtype=dt)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def _layer_cache(cfg: ArchConfig, spec: LayerSpec, batch: int, cache_len: int):
+    m = spec.mixer
+    if m == "attn":
+        return init_attn_cache(cfg, batch, cache_len, kind="causal")
+    if m == "attn_shared":
+        return init_attn_cache(cfg, batch, cache_len, kind="causal")
+    if m == "attn_local":
+        return init_attn_cache(cfg, batch, cache_len, kind="local")
+    if m == "attn_cross":
+        t = max(cfg.num_image_tokens, 1)
+        return AttnCache(
+            k=jnp.zeros((batch, t, cfg.num_kv_heads, cfg.head_dim), jnp.bfloat16),
+            v=jnp.zeros((batch, t, cfg.num_kv_heads, cfg.head_dim), jnp.bfloat16),
+            pos=jnp.zeros((batch, t), jnp.int32),
+        )
+    if m == "mamba2":
+        return rec.init_mamba2_cache(cfg, batch)
+    if m == "mlstm":
+        return rec.init_mlstm_cache(cfg, batch)
+    if m == "slstm":
+        return rec.init_slstm_cache(cfg, batch)
+    return ()
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int) -> dict:
+    blocks = {
+        f"l{i}": jax.tree.map(
+            lambda x: jnp.stack([x] * cfg.num_superblocks) if hasattr(x, "shape") else x,
+            _layer_cache(cfg, s, batch, cache_len),
+        )
+        for i, s in enumerate(cfg.block_pattern)
+    }
+    cache = {
+        "blocks": blocks,
+        "lengths": jnp.zeros((batch,), jnp.int32),
+    }
+    for i, s in enumerate(cfg.head_pattern):
+        cache[f"pre{i}"] = _layer_cache(cfg, s, batch, cache_len)
+    for i, s in enumerate(cfg.tail_pattern):
+        cache[f"tail{i}"] = _layer_cache(cfg, s, batch, cache_len)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+def _apply_layer(
+    lp: dict,
+    shared: Optional[dict],
+    h: jax.Array,
+    cfg: ArchConfig,
+    spec: LayerSpec,
+    *,
+    mode: str,
+    cache: Any = None,
+    lengths: Optional[jax.Array] = None,
+    cross_kv: Optional[jax.Array] = None,
+):
+    """Returns (h, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    m = spec.mixer
+    new_cache = ()
+    if m in ("attn", "attn_local", "attn_cross", "attn_shared"):
+        kind = {
+            "attn": "causal" if cfg.causal else "full",
+            "attn_local": "local",
+            "attn_cross": "cross",
+            "attn_shared": "causal" if cfg.causal else "full",
+        }[m]
+        p_attn = shared["mixer"] if m == "attn_shared" else lp["mixer"]
+        h, new_cache = attn_apply(
+            p_attn, h, cfg, kind=kind, cross_kv=cross_kv,
+            cache=(cache if cache != () else None), lengths=lengths, mode=mode,
+        )
+    elif m == "mamba2":
+        h, new_cache = rec.mamba2_apply(lp["mixer"], h, cfg, mode=mode,
+                                        cache=(cache if cache != () else None))
+    elif m == "mlstm":
+        h, new_cache = rec.mlstm_apply(lp["mixer"], h, cfg, mode=mode,
+                                       cache=(cache if cache != () else None))
+    elif m == "slstm":
+        h, new_cache = rec.slstm_apply(lp["mixer"], h, cfg, mode=mode,
+                                       cache=(cache if cache != () else None))
+
+    if spec.ffn == "mlp":
+        h = mlp_apply(lp["ffn"], h, cfg)
+    elif spec.ffn == "mlp_shared":
+        h = mlp_apply(shared["ffn"], h, cfg)
+    elif spec.ffn == "moe":
+        h, aux = moe_apply(lp["ffn"], h, cfg)
+    if new_cache is None:
+        new_cache = ()
+    return h, new_cache, aux
+
+
+def _apply_superblock(sbp, sbc, shared, h, cfg, *, mode, lengths, cross_kv):
+    # pin the scan carry's sharding (sequence-parallel shards the seq dim over
+    # the model axis: AG/RS around matmuls instead of fp32 psums, and 16x
+    # smaller remat checkpoints)
+    seq_axis = "seq_sp" if (cfg.sequence_parallel and mode == "train") else None
+    h = shard_act(h, "batch", seq_axis, None)
+    auxs = jnp.zeros((), jnp.float32)
+    new_caches = {}
+    for i, spec in enumerate(cfg.block_pattern):
+        c = sbc[f"l{i}"] if sbc is not None else None
+        h, nc, aux = _apply_layer(
+            sbp[f"l{i}"], shared, h, cfg, spec, mode=mode,
+            cache=c, lengths=lengths, cross_kv=cross_kv,
+        )
+        new_caches[f"l{i}"] = nc
+        auxs = auxs + aux
+    return h, new_caches, auxs
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _embed_input(params: dict, cfg: ArchConfig, batch: dict) -> jax.Array:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.frontend == "audio_frames":
+        return shard_act(batch["frames"].astype(cdt), "batch", None, None)
+    h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cdt)
+    if cfg.embed_scale:
+        h = h * np.sqrt(cfg.d_model).astype(np.float32)
+    return shard_act(h, "batch", None, None)
+
+
+def _logits(params: dict, cfg: ArchConfig, h: jax.Array) -> jax.Array:
+    h = rms_norm(h, params["final_norm"])
+    logits = router.matmul(h, params["lm_head"], policy=cfg.router_policy,
+                           out_dtype=jnp.float32)
+    logits = shard_act(logits, "batch", None, "vocab")
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad = cfg.padded_vocab - cfg.vocab_size
+        logits = jnp.where(
+            jnp.arange(cfg.padded_vocab) < cfg.vocab_size, logits,
+            jnp.float32(-1e30),
+        )
+    return logits
+
+
+def forward_train(params: dict, cfg: ArchConfig, batch: dict):
+    """-> (logits (B,S,V) fp32, aux loss scalar)."""
+    h = _embed_input(params, cfg, batch)
+    cross_kv = batch.get("vision")
+    shared = params.get("shared")
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for i, spec in enumerate(cfg.head_pattern):
+        h, _, aux = _apply_layer(params[f"pre{i}"], shared, h, cfg, spec,
+                                 mode="train", cross_kv=cross_kv)
+        aux_total += aux
+
+    def body(carry, sbp):
+        h, aux = carry
+        h2, _, aux2 = _apply_superblock(sbp, None, shared, h, cfg, mode="train",
+                                        lengths=None, cross_kv=cross_kv)
+        return (h2, aux + aux2), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        (h, aux_total), _ = lax.scan(body, (h, aux_total), params["blocks"])
+    else:  # unrolled (HLO cost-analysis mode: while-loop bodies count once)
+        for i in range(cfg.num_superblocks):
+            sbp = jax.tree.map(lambda x: x[i], params["blocks"])
+            (h, aux_total), _ = body((h, aux_total), sbp)
+
+    for i, spec in enumerate(cfg.tail_pattern):
+        h, _, aux = _apply_layer(params[f"tail{i}"], shared, h, cfg, spec,
+                                 mode="train", cross_kv=cross_kv)
+        aux_total += aux
+    return _logits(params, cfg, h), aux_total
+
+
+def loss_fn(params: dict, cfg: ArchConfig, batch: dict):
+    logits, aux = forward_train(params, cfg, batch)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = (lse - gold).mean()
+    loss = ce + cfg.router_aux_weight * aux
+    return loss, {"ce": ce, "aux": aux, "loss": loss}
+
+
+def _forward_cached(params: dict, cfg: ArchConfig, batch: dict, cache: dict, mode: str):
+    h = _embed_input(params, cfg, batch)
+    cross_kv = batch.get("vision")
+    shared = params.get("shared")
+    lengths = cache["lengths"]
+    new_cache: dict = {"blocks": None, "lengths": None}
+
+    for i, spec in enumerate(cfg.head_pattern):
+        h, nc, _ = _apply_layer(params[f"pre{i}"], shared, h, cfg, spec, mode=mode,
+                                cache=cache[f"pre{i}"], lengths=lengths, cross_kv=cross_kv)
+        new_cache[f"pre{i}"] = nc
+
+    def body(h, xs):
+        sbp, sbc = xs
+        h2, ncs, _ = _apply_superblock(sbp, sbc, shared, h, cfg, mode=mode,
+                                       lengths=lengths, cross_kv=cross_kv)
+        return h2, ncs
+
+    if cfg.scan_layers:
+        h, new_blocks = lax.scan(body, h, (params["blocks"], cache["blocks"]))
+    else:
+        ncs_list = []
+        for i in range(cfg.num_superblocks):
+            xs_i = jax.tree.map(lambda x: x[i], (params["blocks"], cache["blocks"]))
+            h, ncs = body(h, xs_i)
+            ncs_list.append(ncs)
+        new_blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *ncs_list)
+    new_cache["blocks"] = new_blocks
+
+    for i, spec in enumerate(cfg.tail_pattern):
+        h, nc, _ = _apply_layer(params[f"tail{i}"], shared, h, cfg, spec, mode=mode,
+                                cache=cache[f"tail{i}"], lengths=lengths, cross_kv=cross_kv)
+        new_cache[f"tail{i}"] = nc
+
+    s_new = h.shape[1]
+    new_cache["lengths"] = lengths + s_new
+    logits = _logits(params, cfg, h[:, -1:, :])  # only the last position's logits
+    return logits, new_cache
+
+
+def prefill(params: dict, cfg: ArchConfig, batch: dict, cache: dict):
+    """Fill the cache from a prompt batch; returns (last-token logits, cache)."""
+    return _forward_cached(params, cfg, batch, cache, "prefill")
+
+
+def decode_step(params: dict, cfg: ArchConfig, batch: dict, cache: dict):
+    """One decode step: batch["tokens"] is (B, 1)."""
+    return _forward_cached(params, cfg, batch, cache, "decode")
+
+
+# ---------------------------------------------------------------------------
+# Model facade
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LM:
+    cfg: ArchConfig
+
+    def specs(self) -> dict:
+        return model_specs(self.cfg)
+
+    def init(self, key: jax.Array) -> dict:
+        return pspec.init_params(self.specs(), key)
+
+    def abstract_params(self) -> dict:
+        return pspec.abstract_params(self.specs())
+
+    def logical_axes(self) -> dict:
+        return pspec.logical_axes(self.specs())
+
+    def init_cache(self, batch: int, cache_len: int) -> dict:
+        return init_cache(self.cfg, batch, cache_len)
+
+    def loss(self, params, batch):
+        return loss_fn(params, self.cfg, batch)
+
+    def forward(self, params, batch):
+        return forward_train(params, self.cfg, batch)
+
+    def prefill(self, params, batch, cache):
+        return prefill(params, self.cfg, batch, cache)
+
+    def decode_step(self, params, batch, cache):
+        return decode_step(params, self.cfg, batch, cache)

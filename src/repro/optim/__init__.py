@@ -1,0 +1,9 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adamw,
+    adafactor,
+    sgd,
+    make_optimizer,
+    clip_by_global_norm,
+    cosine_schedule,
+)

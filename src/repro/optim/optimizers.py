@@ -1,0 +1,176 @@
+"""Pytree optimizers built from scratch (no optax): AdamW, Adafactor (factored
+second moment — the memory-frugal choice for the 1T-param MoE), SGD-momentum,
+global-norm clipping and LR schedules.
+
+Optimizer states inherit the parameter's sharding (same tree structure), so
+ZeRO-style sharded states come for free from the param sharding rules.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, min_ratio: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(np.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gnorm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+
+
+def adamw(lr: Callable | float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.01) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(mu=jax.tree.map(z, params), nu=jax.tree.map(z, params))
+
+    def update(grads, state, params, step):
+        stepf = step.astype(jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+        c1 = 1.0 - b1 ** stepf
+        c2 = 1.0 - b2 ** stepf
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            mhat = m2 / c1
+            vhat = v2 / c2
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m2, v2
+
+        out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, AdamState(mu=new_m, nu=new_v)
+
+    return Optimizer(init=init, update=update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; beta1=0 -> no first moment)
+# ---------------------------------------------------------------------------
+
+class FactoredState(NamedTuple):
+    vr: Any  # row stats (or full v for <2D leaves)
+    vc: Any  # col stats (or () for <2D leaves)
+
+
+def adafactor(lr: Callable | float, eps: float = 1e-30, clip_threshold: float = 1.0,
+              weight_decay: float = 0.0, decay: float = 0.8) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        def vr(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def vc(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((), jnp.float32)
+
+        return FactoredState(vr=jax.tree.map(vr, params), vc=jax.tree.map(vc, params))
+
+    def update(grads, state, params, step):
+        stepf = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - stepf ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(g, vr, vc, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                vr2 = beta2 * vr + (1 - beta2) * g2.mean(axis=-1)
+                vc2 = beta2 * vc + (1 - beta2) * g2.mean(axis=-2)
+                rfac = jax.lax.rsqrt(
+                    vr2 / jnp.maximum(vr2.mean(axis=-1, keepdims=True), eps)
+                )[..., None]
+                cfac = jax.lax.rsqrt(vc2)[..., None, :]
+                u = g * rfac * cfac
+            else:
+                vr2 = beta2 * vr + (1 - beta2) * g2
+                vc2 = vc
+                u = g * jax.lax.rsqrt(vr2)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            delta = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), vr2, vc2
+
+        out = jax.tree.map(upd, grads, state.vr, state.vc, params)
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_r = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_c = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, FactoredState(vr=new_r, vc=new_c)
+
+    return Optimizer(init=init, update=update)
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum
+# ---------------------------------------------------------------------------
+
+def sgd(lr: Callable | float, momentum: float = 0.9) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+
+        def upd(g, m, p):
+            m2 = momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * m2).astype(p.dtype), m2
+
+        out = jax.tree.map(upd, grads, state, params)
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, new_m
+
+    return Optimizer(init=init, update=update)
+
+
+def make_optimizer(name: str, lr, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr, **kw)
+    if name == "adafactor":
+        return adafactor(lr, **kw)
+    if name == "sgd":
+        return sgd(lr, **kw)
+    raise ValueError(f"unknown optimizer {name}")

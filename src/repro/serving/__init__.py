@@ -1,0 +1,2 @@
+from repro.serving.engine import ServeEngine, ServeConfig, Request
+from repro.serving.packet_path import PacketPath, FlowPath

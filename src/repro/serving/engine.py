@@ -1,0 +1,144 @@
+"""LM serving engine: slot-based continuous batching over a fixed decode
+batch, per-slot lengths, prefill + lockstep decode.
+
+This is the paper's task-granularity split at LM scale: the decode path is the
+latency engine (one token per step, VPE-like), prefill/throughput batching is
+the AryPE-like engine; both share the cache through the "memory fabric"
+(sharded KV buffers).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import LM
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (P,) int32
+    max_new: int = 16
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class ServeConfig:
+    batch_slots: int = 4
+    cache_len: int = 256
+    greedy: bool = True
+    eos_id: int = -1  # -1: never stop early
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params: Any, serve: ServeConfig):
+        self.cfg = cfg
+        self.model = LM(cfg)
+        self.params = params
+        self.sc = serve
+        self._prefill = jax.jit(self.model.prefill)
+        self._decode = jax.jit(self.model.decode_step, donate_argnums=(2,))
+        self.reset()
+
+    def reset(self):
+        self.cache = self.model.init_cache(self.sc.batch_slots, self.sc.cache_len)
+        self.slots: list[Optional[Request]] = [None] * self.sc.batch_slots
+        self.queue: list[Request] = []
+        self.next_tok = np.zeros((self.sc.batch_slots, 1), np.int32)
+        self.active = np.zeros((self.sc.batch_slots,), bool)
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        """Prefill queued requests into free slots (one at a time — per-slot
+        prefill writes only that slot's cache rows via a masked batch)."""
+        for i in range(self.sc.batch_slots):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                p = len(req.prompt)
+                toks = np.zeros((self.sc.batch_slots, p), np.int32)
+                toks[i] = req.prompt
+                # reset this slot's length, prefill a full batch but only keep slot i
+                lengths = np.array(jax.device_get(self.cache["lengths"]))
+                single_cache = self.model.init_cache(self.sc.batch_slots, self.sc.cache_len)
+                logits, new_cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)},
+                                                  single_cache)
+                self.cache = _merge_slot(self.cache, new_cache, i)
+                lengths[i] = p
+                self.cache["lengths"] = jnp.asarray(lengths)
+                nt = int(jnp.argmax(logits[i, -1, : self.cfg.vocab_size]))
+                self.next_tok[i, 0] = nt
+                req.out_tokens.append(nt)
+                self.slots[i] = req
+                self.active[i] = True
+
+    def step(self) -> int:
+        """One lockstep decode step across active slots.  Returns #finished."""
+        self._admit()
+        if not self.active.any():
+            return 0
+        logits, self.cache = self._decode(
+            self.params, {"tokens": jnp.asarray(self.next_tok)}, self.cache
+        )
+        nxt = np.asarray(jnp.argmax(logits[:, 0, : self.cfg.vocab_size], axis=-1))
+        finished = 0
+        for i, req in enumerate(self.slots):
+            if req is None or not self.active[i]:
+                continue
+            tok = int(nxt[i])
+            req.out_tokens.append(tok)
+            self.next_tok[i, 0] = tok
+            if len(req.out_tokens) >= req.max_new or tok == self.sc.eos_id:
+                req.done = True
+                self.slots[i] = None
+                self.active[i] = False
+                finished += 1
+        return finished
+
+    def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
+        done: list[Request] = []
+        all_reqs = list(self.queue)
+        for _ in range(max_steps):
+            self.step()
+            if not self.queue and not self.active.any():
+                break
+        return [r for r in all_reqs if r.done]
+
+
+def _merge_slot(old_cache: dict, new_cache: dict, slot: int) -> dict:
+    """Take slot `slot`'s rows from new_cache, keep everything else from old.
+    Every cache leaf has its batch dim at 0 (unstacked) or 1 (stacked under the
+    superblock scan); stacking is detected by shape[0] == num_superblocks."""
+
+    def merge2(o, n, nsb):
+        if not hasattr(o, "shape") or o.ndim == 0:
+            return n if o.shape == () else o
+        bdim = 1 if (o.ndim >= 2 and o.shape[0] == nsb) else 0
+        idx = [slice(None)] * o.ndim
+        idx[bdim] = slot
+        return o.at[tuple(idx)].set(n[tuple(idx)])
+
+    import functools
+
+    nsb = None
+    # infer num_superblocks from the blocks sub-tree leading dims
+    blocks = old_cache.get("blocks", {})
+    for leaf in jax.tree.leaves(blocks):
+        nsb = leaf.shape[0]
+        break
+    out = dict(old_cache)
+    for key in old_cache:
+        if key == "lengths":
+            out[key] = old_cache[key]
+            continue
+        out[key] = jax.tree.map(functools.partial(merge2, nsb=nsb),
+                                old_cache[key], new_cache[key])
+    return out

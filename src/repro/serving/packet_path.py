@@ -1,0 +1,108 @@
+"""The in-network serving paths (paper §2.3 Table 1):
+
+  * PacketPath — packet-granularity, latency-critical: jit-cached inference on
+    small batches (1-10 packets, one per PHY port), the VPE side of the
+    paper's split.  Reports per-packet latency.
+  * FlowPath — flow-granularity, throughput-critical: batched inference over
+    all ready flows (up to the 8k flow table), the AryPE side.  Reports
+    flows/sec.
+
+Both wrap the end-to-end loop: feature extraction -> DL inference -> decision
+(rule-table update), i.e. the paper's working procedure steps 1 -> 6.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import decisions
+from repro.core.feature_extractor import (
+    ExtractorConfig,
+    FeatureExtractor,
+    derive_whole_features,
+    packet_meta_features,
+)
+from repro.core.flow_tracker import PacketBatch
+from repro.models import paper_models
+
+
+@dataclass
+class PathStats:
+    calls: int = 0
+    total_s: float = 0.0
+    items: int = 0
+
+    @property
+    def latency_us(self) -> float:
+        return self.total_s / max(self.calls, 1) * 1e6
+
+    @property
+    def throughput(self) -> float:
+        return self.items / max(self.total_s, 1e-12)
+
+
+class PacketPath:
+    """Use-case 1: per-packet MLP intrusion detection."""
+
+    def __init__(self, params: Any, *, policy: str = "collaborative"):
+        self.params = params
+        self.rules = decisions.RuleTable()
+        self._infer = jax.jit(
+            lambda p, x: decisions.decide_binary(
+                paper_models.mlp_apply(p, x, policy=policy))
+        )
+        self.stats = PathStats()
+
+    def warmup(self, batch: int = 1):
+        x = jnp.zeros((batch, 6), jnp.float32)
+        jax.block_until_ready(self._infer(self.params, x))
+
+    def process(self, packets: PacketBatch) -> np.ndarray:
+        feats = packet_meta_features(packets)
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(self._infer(self.params, feats))
+        dt = time.perf_counter() - t0
+        self.stats.calls += 1
+        self.stats.total_s += dt
+        self.stats.items += feats.shape[0]
+        actions = np.asarray(out)
+        self.rules.update(np.asarray(packets.tuple_hash), actions)
+        return actions
+
+
+class FlowPath:
+    """Use-cases 2/3: flow-granularity classification over ready flows."""
+
+    def __init__(self, params: Any, model: str = "cnn", *, policy: str = "collaborative",
+                 fused_aggregation: bool = True):
+        self.params = params
+        self.model = model
+        self.rules = decisions.RuleTable()
+        if model == "cnn":
+            fn = lambda p, x: paper_models.cnn_apply(
+                p, x, policy=policy, fused_aggregation=fused_aggregation)
+        else:
+            fn = lambda p, x: paper_models.transformer_apply(p, x, policy=policy)
+        self._infer = jax.jit(fn)
+        self.stats = PathStats()
+
+    def warmup(self, flows: int):
+        x = (jnp.zeros((flows, paper_models.CNN_SEQ), jnp.float32) if self.model == "cnn"
+             else jnp.zeros((flows, paper_models.TF_PKTS, paper_models.TF_BYTES), jnp.float32))
+        jax.block_until_ready(self._infer(self.params, x))
+
+    def process(self, flow_inputs: jax.Array, flow_ids: np.ndarray) -> np.ndarray:
+        t0 = time.perf_counter()
+        logits = jax.block_until_ready(self._infer(self.params, flow_inputs))
+        dt = time.perf_counter() - t0
+        self.stats.calls += 1
+        self.stats.total_s += dt
+        self.stats.items += flow_inputs.shape[0]
+        actions, cls = decisions.decide_class(logits)
+        self.rules.update(flow_ids, np.asarray(actions), np.asarray(cls))
+        return np.asarray(cls)

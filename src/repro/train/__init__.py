@@ -1,0 +1,2 @@
+from repro.train.steps import make_train_step
+from repro.train.loop import Trainer, TrainLoopConfig

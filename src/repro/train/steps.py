@@ -1,0 +1,81 @@
+"""Jit-compiled train/eval steps: value_and_grad + clip + optimizer update,
+with optional microbatched gradient accumulation and int8 gradient compression.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import loss_fn
+from repro.optim import Optimizer, clip_by_global_norm
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    optimizer: Optimizer,
+    *,
+    grad_clip: float = 1.0,
+    accum_steps: int = 1,
+    compress_grads: bool = False,
+) -> Callable:
+    """Returns train_step(params, opt_state, step, batch) -> (params, opt_state,
+    metrics).  With accum_steps > 1, the batch's leading dim is split into
+    microbatches scanned sequentially (activation memory / pipeline overlap
+    trade-off)."""
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, cfg, batch
+        )
+        return grads, metrics
+
+    def train_step(params, opt_state, step, batch):
+        if accum_steps == 1:
+            grads, metrics = grads_of(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % accum_steps == 0, (b, accum_steps)
+                return x.reshape(accum_steps, b // accum_steps, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                g_acc, m_acc = carry
+                g, m = grads_of(params, mb)
+                g_acc = jax.tree.map(lambda a, b_: a + b_.astype(jnp.float32), g_acc, g)
+                m_acc = jax.tree.map(lambda a, b_: a + b_, m_acc, m)
+                return (g_acc, m_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            m0 = {"ce": 0.0, "aux": 0.0, "loss": 0.0}
+            m0 = jax.tree.map(jnp.float32, m0)
+            (grads, metrics), _ = lax.scan(acc_body, (g0, m0), micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            metrics = jax.tree.map(lambda m: m / accum_steps, metrics)
+
+        if compress_grads:
+            from repro.distributed.compression import compress_tree, decompress_tree
+
+            grads = decompress_tree(compress_tree(grads))
+
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        new_params, new_opt = optimizer.update(grads, opt_state, params, step)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig) -> Callable:
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, cfg, batch)
+        return metrics
+
+    return eval_step

@@ -1,0 +1,14 @@
+import os
+import sys
+
+# tests run on the default single CPU device; multi-device tests spawn
+# subprocesses with XLA_FLAGS themselves (never set it globally here).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

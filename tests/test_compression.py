@@ -1,0 +1,50 @@
+"""Gradient compression: quantization error bounds + error-feedback property."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed.compression import (
+    compress_tree,
+    decode_int8,
+    decompress_tree,
+    encode_int8,
+    init_error_feedback,
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), scale=st.floats(1e-4, 1e3))
+def test_int8_error_bound(seed, scale):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (256,)) * scale
+    deq = decode_int8(encode_int8(g))
+    max_abs = float(jnp.max(jnp.abs(g)))
+    err = float(jnp.max(jnp.abs(deq - g)))
+    assert err <= max_abs / 127.0 + 1e-6  # half-step rounding bound (scaled)
+
+
+def test_tree_roundtrip_structure():
+    g = {"a": jnp.ones((4, 4)), "b": {"c": jnp.full((3,), -2.0)}}
+    out = decompress_tree(compress_tree(g))
+    assert jax.tree.structure(out) == jax.tree.structure(g)
+    np.testing.assert_allclose(np.asarray(out["b"]["c"]), -2.0, rtol=1e-2)
+
+
+def test_error_feedback_unbiased_over_time():
+    """With error feedback, the accumulated applied update converges to the
+    accumulated true gradient (residual stays bounded)."""
+    rng = np.random.default_rng(0)
+    e = jnp.zeros((64,))
+    applied = jnp.zeros((64,))
+    true_sum = jnp.zeros((64,))
+    for step in range(50):
+        g = jnp.asarray(rng.normal(0, 1e-3, 64), jnp.float32)  # tiny grads stress quantizer
+        true_sum = true_sum + g
+        c = encode_int8(g + e)
+        deq = decode_int8(c)
+        e = (g + e) - deq
+        applied = applied + deq
+    # residual is bounded by one quantization step, so averages converge
+    assert float(jnp.max(jnp.abs(applied - true_sum))) <= float(jnp.max(jnp.abs(e))) + 1e-6
+    assert float(jnp.max(jnp.abs(e))) < 1e-3

@@ -1,0 +1,140 @@
+"""Feature extracting domain: tracker semantics (establish/update/evict/ready/
+release), scan-vs-segmented equivalence, whole-feature derivation (Table 7)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import flow_tracker as ft
+from repro.core.feature_extractor import (
+    ExtractorConfig,
+    FeatureExtractor,
+    derive_whole_features,
+)
+from repro.data.packets import PacketTraceConfig, synth_packet_trace
+from repro.kernels.flow_features.ops import HIST
+
+
+def make_extractor(**kw):
+    return FeatureExtractor(ExtractorConfig(**kw))
+
+
+def test_flow_establish_and_ready():
+    ex = make_extractor(table_size=64, top_n=3)
+    st_ = ex.init_state()
+    pkts = ft.PacketBatch(
+        ts=jnp.asarray([10, 20, 30, 40], jnp.int32),
+        size=jnp.asarray([100, 200, 300, 50], jnp.int32),
+        dir=jnp.asarray([0, 1, 0, 0], jnp.int32),
+        flags=jnp.asarray([1, 2, 4, 8], jnp.int32),
+        proto=jnp.asarray([1, 1, 1, 2], jnp.int32),
+        tuple_hash=jnp.asarray([7, 7, 7, 9], jnp.int32),
+        payload=jnp.zeros((4, 16), jnp.int32),
+    )
+    st2, outs = ex.extract_scan(st_, pkts)
+    assert list(np.asarray(outs.new_flow)) == [True, False, False, True]
+    assert list(np.asarray(outs.ready)) == [False, False, True, False]
+    slot = int(outs.slot[0])
+    feats = np.asarray(st2.features[slot])
+    assert feats[HIST["pkt_count"]] == 3
+    assert feats[HIST["flow_size"]] == 600
+    assert feats[HIST["flow_dur"]] == 20  # 10 + 10
+    assert feats[HIST["max_size"]] == 300
+    assert feats[HIST["min_size"]] == 100
+    assert feats[HIST["size_fwd"]] == 400
+    assert feats[HIST["size_bwd"]] == 200
+    # series memory holds per-packet intervals
+    assert list(np.asarray(st2.series[slot])[:3]) == [0, 10, 10]
+
+
+def test_collision_evicts_stale_flow():
+    ex = make_extractor(table_size=8, top_n=5)
+    st_ = ex.init_state()
+    # two tuples that collide onto the same slot
+    h1, h2 = None, None
+    base = int(ft.hash_slot(jnp.asarray([123], jnp.int32), 8)[0])
+    cands = []
+    for t in range(200, 400):
+        if int(ft.hash_slot(jnp.asarray([t], jnp.int32), 8)[0]) == base:
+            cands.append(t)
+        if len(cands) == 2:
+            break
+    h1, h2 = cands
+    pkts = ft.PacketBatch(
+        ts=jnp.asarray([1, 2, 3], jnp.int32),
+        size=jnp.asarray([10, 20, 30], jnp.int32),
+        dir=jnp.zeros(3, jnp.int32), flags=jnp.zeros(3, jnp.int32),
+        proto=jnp.zeros(3, jnp.int32),
+        tuple_hash=jnp.asarray([h1, h2, h2], jnp.int32),
+        payload=jnp.zeros((3, 16), jnp.int32),
+    )
+    st2, outs = ex.extract_scan(st_, pkts)
+    assert list(np.asarray(outs.evicted)) == [False, True, False]
+    slot = int(outs.slot[0])
+    assert int(st2.features[slot][HIST["pkt_count"]]) == 2  # only h2's packets
+
+
+def test_release_recycles_storage():
+    ex = make_extractor(table_size=16, top_n=2)
+    st_ = ex.init_state()
+    pkts = ft.PacketBatch(
+        ts=jnp.asarray([1, 2], jnp.int32), size=jnp.asarray([5, 6], jnp.int32),
+        dir=jnp.zeros(2, jnp.int32), flags=jnp.zeros(2, jnp.int32),
+        proto=jnp.zeros(2, jnp.int32), tuple_hash=jnp.asarray([3, 3], jnp.int32),
+        payload=jnp.zeros((2, 16), jnp.int32),
+    )
+    st2, outs = ex.extract_scan(st_, pkts)
+    slot = int(outs.slot[0])
+    st3 = ft.release_flows(st2, jnp.asarray([slot]))
+    assert int(st3.count[slot]) == 0
+
+
+def test_segmented_matches_scan_on_trace():
+    cfg = PacketTraceConfig(num_flows=50, pkts_per_flow=8, seed=3, table_size=512)
+    packets, classes, hashes, labels = synth_packet_trace(cfg)
+    ex = make_extractor(table_size=512, top_n=8, top_k=4, pay_bytes=16)
+    st_ = ex.init_state()
+    st_scan, _ = ex.extract_scan(st_, packets)
+    feats, series, sizes, payload, counts = ex.extract_segmented(packets)
+    occupied = np.asarray(counts) > 0
+    np.testing.assert_array_equal(np.asarray(st_scan.features)[occupied],
+                                  np.asarray(feats)[occupied])
+    np.testing.assert_array_equal(np.asarray(st_scan.series)[occupied],
+                                  np.asarray(series)[occupied])
+    np.testing.assert_array_equal(np.asarray(st_scan.payload)[occupied],
+                                  np.asarray(payload)[occupied])
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), nflows=st.integers(2, 30), npkts=st.integers(1, 10))
+def test_segmented_scan_property(seed, nflows, npkts):
+    cfg = PacketTraceConfig(num_flows=nflows, pkts_per_flow=npkts, seed=seed,
+                            table_size=256)
+    packets, *_ = synth_packet_trace(cfg)
+    ex = make_extractor(table_size=256, top_n=max(npkts, 2), top_k=2, pay_bytes=16)
+    st_scan, _ = ex.extract_scan(ex.init_state(), packets)
+    feats, *_ , counts = ex.extract_segmented(packets)
+    occ = np.asarray(counts) > 0
+    np.testing.assert_array_equal(np.asarray(st_scan.features)[occ],
+                                  np.asarray(feats)[occ])
+
+
+def test_derive_whole_features():
+    ex = make_extractor(table_size=32, top_n=4)
+    st_ = ex.init_state()
+    pkts = ft.PacketBatch(
+        ts=jnp.asarray([0, 10, 30], jnp.int32), size=jnp.asarray([100, 300, 200], jnp.int32),
+        dir=jnp.asarray([0, 1, 0], jnp.int32), flags=jnp.ones(3, jnp.int32),
+        proto=jnp.ones(3, jnp.int32), tuple_hash=jnp.asarray([5, 5, 5], jnp.int32),
+        payload=jnp.zeros((3, 16), jnp.int32),
+    )
+    st2, outs = ex.extract_scan(st_, pkts)
+    slot = int(outs.slot[0])
+    w = np.asarray(derive_whole_features(st2.features[slot]))
+    assert w[0] == 30  # duration
+    assert w[1] == 3  # packets
+    assert w[2] == 600  # flow size
+    assert w[3] == 200  # mean size
+    assert w[4] == 300 and w[5] == 100  # max/min size
+    assert w[9] == 300 and w[10] == 300  # fwd/bwd sizes

@@ -1,0 +1,116 @@
+"""Per-arch smoke tests (reduced configs): one forward/train step on CPU,
+asserting output shapes + finite values — as required by the assignment."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config, list_archs, reduced_config
+from repro.models import LM
+
+ARCHS = list_archs()
+
+
+def make_batch(cfg, key, b=2, s=16, labels=True):
+    batch = {}
+    if cfg.frontend == "audio_frames":
+        batch["frames"] = jax.random.normal(key, (b, s, cfg.d_model), jnp.float32)
+    else:
+        batch["tokens"] = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    if cfg.frontend == "vision_patches":
+        batch["vision"] = jax.random.normal(key, (b, cfg.num_image_tokens, cfg.d_model),
+                                            jnp.float32)
+    if labels:
+        batch["labels"] = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    return batch
+
+
+def test_all_archs_registered():
+    assert len(ARCHS) == 10
+    assert set(ARCHS) == {
+        "xlstm-1.3b", "llama-3.2-vision-90b", "gemma3-1b", "qwen3-0.6b", "qwen3-4b",
+        "starcoder2-15b", "kimi-k2-1t-a32b", "granite-moe-1b-a400m", "zamba2-2.7b",
+        "hubert-xlarge",
+    }
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_dims(arch):
+    """The full configs carry the exact assigned dimensions."""
+    cfg = get_config(arch)
+    expected = {
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+        "llama-3.2-vision-90b": (100, 8192, 64, 8, 28672, 128256),
+        "gemma3-1b": (26, 1152, 4, 1, 6912, 262144),
+        "qwen3-0.6b": (28, 1024, 16, 8, 3072, 151936),
+        "qwen3-4b": (36, 2560, 32, 8, 9728, 151936),
+        "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.d_ff,
+           cfg.vocab_size)
+    assert got == expected, (arch, got, expected)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = reduced_config(get_config(arch))
+    m = LM(cfg)
+    key = jax.random.PRNGKey(0)
+    params = m.init(key)
+    batch = make_batch(cfg, key)
+    logits, aux = jax.jit(m.forward)(params, batch)
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits[..., : cfg.vocab_size])))
+    # one train (grad) step
+    loss, grads = jax.jit(
+        lambda p, b: jax.value_and_grad(lambda pp: m.loss(pp, b)[0])(p)
+    )(params, batch)
+    assert bool(jnp.isfinite(loss))
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_shape_cells_follow_assignment_rules(arch):
+    cfg = get_config(arch)
+    cells = cfg.shape_cells()
+    assert "train_4k" in cells and "prefill_32k" in cells
+    if arch == "hubert-xlarge":
+        assert "decode_32k" not in cells and "long_500k" not in cells
+    else:
+        assert "decode_32k" in cells
+    if arch in ("xlstm-1.3b", "zamba2-2.7b", "gemma3-1b"):
+        assert "long_500k" in cells  # sub-quadratic archs run the 500k cell
+    if arch in ("qwen3-0.6b", "qwen3-4b", "starcoder2-15b", "llama-3.2-vision-90b",
+                "kimi-k2-1t-a32b", "granite-moe-1b-a400m"):
+        assert "long_500k" not in cells  # pure full-attention: skipped
+
+
+def test_total_cells_documented():
+    from repro.launch.cells import all_cells
+
+    cells = all_cells()
+    # 10 archs x 4 shapes = 40 nominal; 7 long_500k skips + 1 decode skip = 32
+    assert len(cells) == 32
+
+
+@pytest.mark.parametrize("arch", ["gemma3-1b", "zamba2-2.7b", "xlstm-1.3b"])
+def test_decode_state_is_constant_size(arch):
+    """long_500k eligibility: decode cache must not scale with history for the
+    recurrent parts (ring buffers for local attention)."""
+    cfg = reduced_config(get_config(arch))
+    m = LM(cfg)
+    cache64 = jax.eval_shape(lambda: m.init_cache(1, 64))
+    cache256 = jax.eval_shape(lambda: m.init_cache(1, 256))
+    l64 = jax.tree.leaves(cache64)
+    l256 = jax.tree.leaves(cache256)
+    grew = sum(int(np.prod(b.shape)) > int(np.prod(a.shape))
+               for a, b in zip(l64, l256))
+    if arch == "xlstm-1.3b":
+        assert grew == 0  # pure recurrent: nothing grows with history
+    else:
+        assert grew < len(l64)  # hybrid: only global-attn caches grow

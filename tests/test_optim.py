@@ -1,0 +1,77 @@
+"""Optimizers: AdamW against hand-computed math, Adafactor memory shape +
+convergence, clipping, schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adafactor, adamw, clip_by_global_norm, cosine_schedule, sgd
+
+
+def test_adamw_matches_manual_math():
+    lr, b1, b2, eps, wd = 0.1, 0.9, 0.95, 1e-8, 0.0
+    opt = adamw(lr, b1, b2, eps, wd)
+    params = {"w": jnp.asarray([1.0, -2.0])}
+    g = {"w": jnp.asarray([0.5, 0.5])}
+    state = opt.init(params)
+    p1, s1 = opt.update(g, state, params, jnp.asarray(0))
+    m = 0.1 * 0.5
+    v = 0.05 * 0.25
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.95)
+    expect = 1.0 - lr * mhat / (np.sqrt(vhat) + eps)
+    np.testing.assert_allclose(float(p1["w"][0]), expect, rtol=1e-6)
+
+
+def test_adamw_weight_decay():
+    opt = adamw(0.1, weight_decay=0.1)
+    params = {"w": jnp.asarray([1.0])}
+    g = {"w": jnp.asarray([0.0])}
+    p1, _ = opt.update(g, opt.init(params), params, jnp.asarray(0))
+    np.testing.assert_allclose(float(p1["w"][0]), 1.0 - 0.1 * 0.1 * 1.0, rtol=1e-6)
+
+
+@pytest.mark.parametrize("make", [lambda: adamw(0.05), lambda: adafactor(0.05),
+                                  lambda: sgd(0.01)])
+def test_optimizers_minimize_quadratic(make):
+    opt = make()
+    params = {"w": jnp.asarray(np.random.default_rng(0).normal(0, 1, (8, 4)), jnp.float32)}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - 3.0) ** 2)
+
+    l0 = float(loss(params))
+    for step in range(150):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, jnp.asarray(step))
+    assert float(loss(params)) < 0.05 * l0
+
+
+def test_adafactor_state_is_factored():
+    opt = adafactor(0.01)
+    params = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((32,))}
+    st = opt.init(params)
+    assert st.vr["w"].shape == (64,)
+    assert st.vc["w"].shape == (32,)
+    assert st.vr["b"].shape == (32,)
+    n_opt = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(st))
+    n_par = 64 * 32 + 32
+    assert n_opt < 0.1 * n_par  # sub-linear optimizer memory
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.asarray([3.0, 4.0])}  # norm 5
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(norm), 5.0, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(clipped["a"]), [0.6, 0.8], rtol=1e-5)
+    unclipped, _ = clip_by_global_norm(g, 10.0)
+    np.testing.assert_allclose(np.asarray(unclipped["a"]), [3.0, 4.0], rtol=1e-6)
+
+
+def test_cosine_schedule():
+    lr = cosine_schedule(1.0, warmup=10, total=110)
+    assert float(lr(0)) == 0.0
+    np.testing.assert_allclose(float(lr(5)), 0.5, rtol=1e-5)
+    np.testing.assert_allclose(float(lr(10)), 1.0, rtol=1e-5)
+    assert float(lr(110)) <= 0.11

@@ -1,0 +1,84 @@
+"""Roofline machinery: HLO collective parsing, term math, report rendering."""
+import json
+
+import pytest
+
+from repro.launch.roofline import Roofline, parse_collectives
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+HLO = """
+HloModule jit_step, entry_computation_layout={...}
+
+%fused (p: f32[16,128]) -> f32[16,128] {
+  ROOT %x = f32[16,128]{1,0} parameter(0)
+}
+
+ENTRY %main {
+  %p0 = f32[16,128]{1,0} parameter(0)
+  %all-gather = f32[256,128]{1,0} all-gather(%p0), replica_groups=[16,16]<=[256], dimensions={0}
+  %all-reduce = f32[16,128]{1,0} all-reduce(%p0), replica_groups=[1,256]<=[256], to_apply=%add
+  %ars = f32[16,128]{1,0} all-reduce-start(%p0), replica_groups=[16,16]<=[256]
+  %ard = f32[16,128]{1,0} all-reduce-done(%ars)
+  %rs = bf16[1,128]{1,0} reduce-scatter(%p0), replica_groups=[16,16]<=[256], dimensions={0}
+  %cp = f32[16,128]{1,0} collective-permute(%p0), source_target_pairs={{0,1}}
+  %a2a = (f32[4,128], f32[4,128]) all-to-all(%p0, %p0), replica_groups=[64,4]<=[256]
+  ROOT %t = f32[16,128]{1,0} add(%p0, %cp)
+}
+"""
+
+
+def test_parse_collectives_kinds_and_groups():
+    st = parse_collectives(HLO, 256)
+    assert st.counts["all-gather"] == 1
+    assert st.counts["all-reduce"] == 2  # plain + -start (done not counted)
+    assert st.counts["reduce-scatter"] == 1
+    assert st.counts["collective-permute"] == 1
+    assert st.counts["all-to-all"] == 1
+    # all-gather result = 256*128*4 bytes, group 16
+    ag = 256 * 128 * 4
+    assert st.bytes_by_kind["all-gather"] == ag
+    # all-to-all result: tuple of two f32[4,128]
+    assert st.bytes_by_kind["all-to-all"] == 2 * 4 * 128 * 4
+    # effective bytes positive and >= permute bytes
+    assert st.effective_bytes > 16 * 128 * 4
+
+
+def test_roofline_terms_and_bottleneck():
+    rf = Roofline(
+        label="x/train", mesh="single", chips=256,
+        flops_per_device=1.97e14,  # exactly 1 s of compute
+        bytes_per_device=819e9 * 2,  # 2 s of memory
+        collective_bytes_eff=50e9 * 0.5,  # 0.5 s of collectives
+        collective_counts={}, model_flops_total=1.97e14 * 256 * 0.5,
+        memory={"peak_bytes_est": 1},
+    )
+    assert abs(rf.compute_term_s - 1.0) < 1e-9
+    assert abs(rf.memory_term_s - 2.0) < 1e-9
+    assert abs(rf.collective_term_s - 0.5) < 1e-9
+    assert rf.bottleneck == "memory"
+    assert abs(rf.useful_flops_fraction - 0.5) < 1e-9
+    # roofline fraction: achieved useful flops over peak at the 2 s bound
+    assert abs(rf.roofline_fraction - 0.25) < 1e-9
+    d = rf.to_dict()
+    assert d["bottleneck"] == "memory"
+    json.dumps(d)  # serializable
+
+
+def test_report_renders(tmp_path):
+    from repro.launch import report
+
+    rf = Roofline(
+        label="a/train_4k", mesh="single", chips=256, flops_per_device=1e12,
+        bytes_per_device=1e12, collective_bytes_eff=1e10,
+        collective_counts={"all-reduce": [3, 1e9]},
+        model_flops_total=1e14, memory={"peak_bytes_est": 2**30,
+                                        "argument_bytes": 0, "output_bytes": 0,
+                                        "temp_bytes": 0, "alias_bytes": 0},
+    )
+    p = tmp_path / "a__train_4k__single.json"
+    p.write_text(json.dumps(rf.to_dict()))
+    rows = report.load_all(str(tmp_path))
+    t1 = report.dryrun_table(rows)
+    t2 = report.roofline_table(rows)
+    assert "a/train_4k" in t1 and "all-reducex3" in t1
+    assert "a/train_4k" in t2 and "%" in t2

@@ -1,0 +1,69 @@
+"""Octopus router: utilization model (incl. the paper's 9.3% example), path
+equivalence, and the policy's routing decisions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import router
+
+
+def test_paper_utilization_example():
+    # §3.2.3: first CNN layer (10,3)x(3,32) on a 32x32 array -> 9.3%
+    u = router.systolic_utilization(10, 3, 32, array=32)
+    assert abs(u - 0.09375) < 1e-9
+
+
+def test_utilization_full_tiles():
+    assert router.mxu_utilization(1024, 1024, 1024) == 1.0
+    assert router.mxu_utilization(1024, 64, 1024) == 0.5
+    assert router.mxu_utilization(4, 128, 128) == 0.5
+
+
+def test_routing_decisions():
+    assert router.route_matmul(10, 3, 32).path == "vpe"
+    assert router.route_matmul(4096, 4096, 4096).path == "arype"
+    assert router.route_matmul(20000, 3, 32).path == "vpe"  # CNN layer 1, f=1000
+    assert router.route_matmul(10000, 96, 32, policy="arype_only").path == "arype"
+    # big working set never goes to VPE even at low util
+    assert router.route_matmul(10**6, 64, 64).path == "arype"
+
+
+@pytest.mark.parametrize("policy", ["collaborative", "arype_only", "vpe_only"])
+@pytest.mark.parametrize("shape", [((4, 10, 3), (3, 32)), ((128, 64), (64, 96)),
+                                   ((2, 3, 7, 5), (5, 9))])
+def test_matmul_path_equivalence(policy, shape):
+    xs, ws = shape
+    x = jax.random.normal(jax.random.PRNGKey(0), xs, jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), ws, jnp.float32)
+    out = router.matmul(x, w, policy=policy)
+    ref = jnp.einsum("...k,kn->...n", x, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 300), k=st.integers(1, 300), n=st.integers(1, 300),
+       act=st.sampled_from([None, "relu", "silu", "gelu"]))
+def test_matmul_property(m, k, n, act):
+    x = jax.random.normal(jax.random.PRNGKey(m * 7 + k), (m, k), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(n), (k, n), jnp.float32)
+    out = router.matmul(x, w, policy="collaborative", activation=act)
+    ref = jnp.dot(x, w)
+    if act == "relu":
+        ref = jnp.maximum(ref, 0)
+    elif act == "silu":
+        ref = ref * jax.nn.sigmoid(ref)
+    elif act == "gelu":
+        ref = jax.nn.gelu(ref)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_pallas_paths_match_jnp():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 48), jnp.float32)
+    w_small = jax.random.normal(jax.random.PRNGKey(1), (48, 8), jnp.float32)
+    w_big = jax.random.normal(jax.random.PRNGKey(2), (48, 256), jnp.float32)
+    for w in (w_small, w_big):
+        a = router.matmul(x, w, use_pallas=True)
+        b = router.matmul(x, w, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)

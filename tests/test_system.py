@@ -1,0 +1,128 @@
+"""End-to-end behaviour tests for the paper's system: packets -> feature
+extractor -> DL inference -> decisions (the full Octopus working procedure),
+for all three use-cases, plus the cycle model's validation of the paper's own
+Table 6 numbers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import decisions
+from repro.core.collaborative import (
+    OctopusCycleModel,
+    collaborative_forward,
+    usecase2_layers,
+    usecase3_layers,
+)
+from repro.core.feature_extractor import ExtractorConfig, FeatureExtractor
+from repro.data.packets import PacketTraceConfig, synth_packet_trace
+from repro.models import paper_models
+from repro.serving.packet_path import FlowPath, PacketPath
+
+
+@pytest.fixture(scope="module")
+def trace():
+    cfg = PacketTraceConfig(num_flows=64, pkts_per_flow=20, seed=7, table_size=1024)
+    return synth_packet_trace(cfg)
+
+
+def test_usecase1_packet_mlp_end_to_end(trace):
+    packets, classes, hashes, labels = trace
+    params = paper_models.init_paper_model("mlp", jax.random.PRNGKey(0))
+    path = PacketPath(params)
+    path.warmup(batch=packets.ts.shape[0])
+    actions = path.process(packets)
+    assert actions.shape == (packets.ts.shape[0],)
+    assert set(np.unique(actions)) <= {0, 1}
+    assert path.rules.lookup(int(packets.tuple_hash[0]))["generation"] == 1
+    assert path.stats.latency_us > 0
+
+
+def test_usecase2_flow_cnn_end_to_end(trace):
+    packets, classes, hashes, labels = trace
+    ex = FeatureExtractor(ExtractorConfig(table_size=1024, top_n=20))
+    feats, series, sizes, payload, counts = ex.extract_segmented(packets)
+    ready = np.asarray(counts) >= 20
+    assert ready.sum() == 64  # all flows delivered top-20 packets
+    x = jnp.log1p(series[ready].astype(jnp.float32))
+    params = paper_models.init_paper_model("cnn", jax.random.PRNGKey(0))
+    fp = FlowPath(params, model="cnn")
+    cls = fp.process(x, np.flatnonzero(ready))
+    assert cls.shape == (64,)
+    assert (cls >= 0).all() and (cls < paper_models.CNN_CLASSES).all()
+
+
+def test_usecase3_payload_transformer_end_to_end(trace):
+    packets, classes, hashes, labels = trace
+    ex = FeatureExtractor(ExtractorConfig(table_size=1024, top_n=20, top_k=15,
+                                          pay_bytes=16))
+    feats, series, sizes, payload, counts = ex.extract_segmented(packets)
+    ready = np.asarray(counts) >= 15
+    x = payload[ready].astype(jnp.float32) / 255.0
+    params = paper_models.init_paper_model("transformer", jax.random.PRNGKey(0))
+    fp = FlowPath(params, model="transformer")
+    cls = fp.process(x, np.flatnonzero(ready))
+    assert cls.shape[0] == int(ready.sum())
+
+
+def test_cnn_matmul_mapping_matches_paper():
+    """The img2col lowering reproduces the paper's §4.2 matmul shapes."""
+    f = 3
+    x = jnp.zeros((f, paper_models.CNN_SEQ))
+    shapes = []
+    orig = jax.numpy.concatenate
+
+    # capture conv input widths by probing layer dims directly
+    h = x[..., :, None]
+    for i, (ci, co) in enumerate(zip(paper_models.CNN_CHANNELS[:-1],
+                                     paper_models.CNN_CHANNELS[1:])):
+        cols = paper_models._img2col_1d(h, paper_models.CNN_KERNEL)
+        shapes.append((cols.shape[-2] * f if False else cols.shape[-2], cols.shape[-1], co))
+        h = jnp.zeros((f, cols.shape[-2], co))
+        h = paper_models._ceil_pool(h)
+    # per-flow window counts 20 -> 10 -> 5 and K dims 3 -> 96 -> 96
+    assert shapes[0] == (20, 3, 32)
+    assert shapes[1] == (10, 96, 32)
+    assert shapes[2] == (5, 96, 32)
+    assert h.shape == (f, 3, 32)  # flatten -> 96 (paper's FC input)
+
+
+def test_collaborative_fused_equals_unfused():
+    ws = [jax.random.normal(jax.random.PRNGKey(i), s) for i, s in
+          enumerate([(300, 64), (64, 96), (96, 8)])]
+    x = jax.random.normal(jax.random.PRNGKey(9), (32, 300))
+    a = collaborative_forward(x, ws, ["relu", "relu", None], fused_aggregation=True)
+    b = collaborative_forward(x, ws, ["relu", "relu", None], fused_aggregation=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_cycle_model_reproduces_paper_table6_shape():
+    """Paper Table 6: wo/ collaborating AryPE efficiency 48.2%; w/ 81.1%;
+    1.69x throughput.  Our first-principles model lands within a few points
+    on the ablation side and reproduces the direction and magnitude of the
+    collaborative win."""
+    m = OctopusCycleModel()
+    off = m.stack_report(usecase2_layers(1000), collaborative=False)
+    on = m.stack_report(usecase2_layers(1000), collaborative=True)
+    assert abs(off["arype_eff"] - 0.482) < 0.06  # paper: 48.2%
+    assert on["arype_eff"] > off["arype_eff"] + 0.25
+    speedup = off["time_s"] / on["time_s"]
+    assert 1.4 < speedup < 2.6  # paper: 1.69x
+
+
+def test_cycle_model_usecase3_efficiency():
+    m = OctopusCycleModel()
+    rep = m.stack_report(usecase3_layers(1000), collaborative=True)
+    # paper: 96.3% AryPE efficiency for the transformer use-case
+    assert rep["arype_eff"] > 0.70
+
+
+def test_decision_module():
+    logits = jnp.asarray([[0.1, 5.0], [5.0, 0.1]])
+    acts = decisions.decide_binary(logits)
+    assert list(np.asarray(acts)) == [1, 0]
+    table = decisions.RuleTable()
+    table.update(np.asarray([11, 22]), np.asarray(acts))
+    assert table.lookup(11)["action"] == "deny"
+    assert table.lookup(22)["action"] == "allow"
+    assert table.lookup(99)["action"] == "allow"  # default
