@@ -17,15 +17,17 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import row, time_fn
-from repro.core.collaborative import OctopusCycleModel, usecase2_layers
+from repro.core.collaborative import OctopusCycleModel, usecase2_plan
 from repro.models import paper_models
+from repro.runtime import RuntimeConfig
 
 
 def run(flows: int = 1000) -> list[str]:
     rows = []
     m = OctopusCycleModel()
-    off = m.stack_report(usecase2_layers(flows), collaborative=False)
-    on = m.stack_report(usecase2_layers(flows), collaborative=True)
+    plan = usecase2_plan(flows)  # one placement, shared by model + execution
+    off = m.stack_report(plan, collaborative=False)
+    on = m.stack_report(plan, collaborative=True)
     speedup = off["time_s"] / on["time_s"]
     rows.append(row(
         "collab_cycle_model_wo", off["time_s"] * 1e6,
@@ -40,15 +42,16 @@ def run(flows: int = 1000) -> list[str]:
     params = paper_models.init_paper_model("cnn", jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (flows, paper_models.CNN_SEQ))
     variants = {
-        "fused": ("arype_only", True),     # all on the dot path, fused aggregation
-        "unfused": ("arype_only", False),  # 'straightforwardly inserted': block
-        #                                    partials round-trip through memory
-        "routed_fused": ("collaborative", True),  # Octopus placement
+        # all on the dot path, fused aggregation
+        "fused": RuntimeConfig(policy="arype_only"),
+        # 'straightforwardly inserted': block partials round-trip through memory
+        "unfused": RuntimeConfig(policy="arype_only", fused_aggregation=False),
+        # Octopus placement
+        "routed_fused": RuntimeConfig(policy="collaborative"),
     }
     times = {}
-    for name, (policy, fused) in variants.items():
-        fn = jax.jit(lambda p, xx, policy=policy, fused=fused: paper_models.cnn_apply(
-            p, xx, policy=policy, fused_aggregation=fused))
+    for name, cfg in variants.items():
+        fn = jax.jit(lambda p, xx, cfg=cfg: paper_models.cnn_apply(p, xx, config=cfg))
         times[name] = time_fn(fn, params, x)
         rows.append(row(f"collab_jax_{name}", times[name] * 1e6,
                         f"kflow_s={flows/times[name]/1e3:.1f}"))

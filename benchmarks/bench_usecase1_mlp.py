@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from benchmarks.common import row, time_fn
 from repro.core.collaborative import OctopusCycleModel
 from repro.models import paper_models
+from repro.runtime import RuntimeConfig
 
 
 def run() -> list[str]:
@@ -22,7 +23,8 @@ def run() -> list[str]:
     for batch in (1, 8, 64):
         x = jax.random.normal(jax.random.PRNGKey(1), (batch, 6), jnp.float32)
         for policy in ("collaborative", "arype_only"):
-            fn = jax.jit(lambda p, xx: paper_models.mlp_apply(p, xx, policy=policy))
+            cfg = RuntimeConfig(policy=policy)
+            fn = jax.jit(lambda p, xx, cfg=cfg: paper_models.mlp_apply(p, xx, config=cfg))
             t = time_fn(fn, params, x)
             rows.append(row(
                 f"usecase1_mlp_b{batch}_{policy}", t * 1e6,

@@ -6,14 +6,14 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import row, time_fn
-from repro.core.collaborative import OctopusCycleModel, usecase3_layers
+from repro.core.collaborative import OctopusCycleModel, usecase3_plan
 from repro.models import paper_models
 
 
 def run(flows: int = 1000) -> list[str]:
     rows = []
     m = OctopusCycleModel()
-    rep = m.stack_report(usecase3_layers(flows), collaborative=True)
+    rep = m.stack_report(usecase3_plan(flows), collaborative=True)
     rows.append(row(
         "usecase3_cycle_model", rep["time_s"] * 1e6,
         f"arype_eff={rep['arype_eff']:.3f};paper_eff=0.963;"

@@ -33,6 +33,7 @@ def main():
     from repro.core.feature_extractor import ExtractorConfig, FeatureExtractor
     from repro.data.packets import PacketTraceConfig, synth_packet_trace
     from repro.models import paper_models
+    from repro.runtime import RuntimeConfig
     from repro.serving.packet_path import FlowPath, PacketPath
 
     # ---------------------------------------------------------------- traffic
@@ -66,6 +67,7 @@ def main():
     x_cnn = jnp.log1p(series[ready].astype(jnp.float32))
     cnn_params = paper_models.init_paper_model("cnn", jax.random.PRNGKey(1))
     fpath = FlowPath(cnn_params, model="cnn")
+    print(fpath.route_plan(int(ready.sum())).explain())  # shared placement truth
     fpath.warmup(int(ready.sum()))
     cls = fpath.process(x_cnn, np.flatnonzero(ready))
     kflow = fpath.stats.throughput / 1e3
@@ -76,10 +78,11 @@ def main():
     # (block partials through memory vs fused accumulation); the routing half
     # only shows on the TPU target / cycle model (CPUs prefer dots over the
     # VPU-style mul+reduce), see benchmarks/bench_collaborative.py.
-    fpath_fused = FlowPath(cnn_params, model="cnn", policy="arype_only",
-                           fused_aggregation=True)
-    fpath_off = FlowPath(cnn_params, model="cnn", policy="arype_only",
-                         fused_aggregation=False)
+    fpath_fused = FlowPath(cnn_params, model="cnn",
+                           config=RuntimeConfig(policy="arype_only"))
+    fpath_off = FlowPath(cnn_params, model="cnn",
+                         config=RuntimeConfig(policy="arype_only",
+                                              fused_aggregation=False))
     for p_ in (fpath_fused, fpath_off):
         p_.warmup(int(ready.sum()))
         p_.process(x_cnn, np.flatnonzero(ready))

@@ -17,6 +17,7 @@ from repro.configs import get_config, reduced_config
 from repro.data.tokens import TokenPipeline, TokenPipelineConfig
 from repro.models import LM
 from repro.optim import adamw
+from repro.runtime import RoutePlan
 from repro.train.steps import make_train_step
 
 
@@ -48,6 +49,10 @@ def main():
     # --- greedy decode ---------------------------------------------------------
     prompt = jnp.asarray([[5, 9, 2, 7]], jnp.int32)
     cache = model.init_cache(batch=1, cache_len=32)
+    # Octopus placement report for the prefill (traced abstractly, no FLOPs):
+    plan = RoutePlan.trace(
+        lambda p: model.prefill(p, {"tokens": prompt}, cache), restored["params"])
+    print(plan.explain())
     logits, cache = jax.jit(model.prefill)(restored["params"],
                                            {"tokens": prompt}, cache)
     toks = [int(jnp.argmax(logits[0, -1, : cfg.vocab_size]))]

@@ -32,7 +32,7 @@ import numpy as np
 
 
 def _flatten(tree: Any) -> tuple[list[tuple[str, Any]], Any]:
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     items = [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
     return items, treedef
 

@@ -4,19 +4,24 @@ Two artifacts live here:
 
 1. :func:`collaborative_forward` — execute a stack of matmul layers with the
    router's placement (small layers -> VPE path, large -> AryPE path, block
-   aggregation fused), plus the explicit *unfused* mode for the paper's
-   "wo/ collaborating" ablation (Table 6).
+   aggregation fused).  Placement comes from a :class:`RoutePlan` (built once
+   per stack, or passed in), so the execution path and the cycle model share
+   one source of truth.  ``RuntimeConfig.fused_aggregation=False`` reproduces
+   the paper's "wo/ collaborating" ablation (Table 6): AryPE-path matmuls
+   write K-block partials to memory and aggregate in a separate pass.
 
 2. :class:`OctopusCycleModel` — a cycle-accurate-ish analytical model of the
    paper's FPGA implementation (16x16 AryPE, 8-lane x 2-sublane SIMDU, 8-unit
    VU, 222 MHz, dual 16-byte memory channels).  We use it to *validate the
    paper's own claims* (Table 6's 53 -> 90 kflow/s, 1.69x; use-case 3's
    35.7 kflow/s) from first principles before going beyond them on TPU.
+   Its :meth:`stack_report` consumes the same :class:`RoutePlan` the JAX
+   path executes, so analytical placement can never silently diverge.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Optional, Sequence
+from dataclasses import dataclass
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +29,7 @@ import numpy as np
 
 from repro.common.util import ceil_div
 from repro.core import router
+from repro.runtime import RoutePlan, RuntimeConfig, resolve_config
 
 
 # ---------------------------------------------------------------------------
@@ -36,36 +42,73 @@ class MatmulLayer:
     activation: Optional[str] = None
 
 
+def plan_stack(
+    x: Union[jax.Array, jax.ShapeDtypeStruct],
+    weights: Sequence[jax.Array],
+    *,
+    config: Optional[RuntimeConfig] = None,
+    names: Optional[Sequence[str]] = None,
+) -> RoutePlan:
+    """Route a stack of matmul layers once: the (batch*M) stream length is
+    invariant through the stack, K/N follow the weight shapes."""
+    m_eff = int(np.prod(x.shape[:-1], dtype=np.int64))
+    layers = []
+    for i, w in enumerate(weights):
+        name = names[i] if names is not None else f"layer{i}"
+        layers.append((name, m_eff, int(w.shape[0]), int(w.shape[1])))
+    return RoutePlan.from_layers(layers, config=config)
+
+
 def collaborative_forward(
     x: jax.Array,
     weights: Sequence[jax.Array],
     activations: Sequence[Optional[str]],
     *,
-    policy: str = "collaborative",
-    use_pallas: bool = False,
-    fused_aggregation: bool = True,
-    interpret: bool = True,
+    config: Optional[RuntimeConfig] = None,
+    plan: Optional[RoutePlan] = None,
+    policy: Optional[str] = None,
+    use_pallas: Optional[bool] = None,
+    fused_aggregation: Optional[bool] = None,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """Run x through a stack of routed matmuls.  ``fused_aggregation=False``
-    reproduces the 'wo/ collaborating' ablation: AryPE-path matmuls write
-    K-block partials to memory and aggregate in a separate pass."""
+    """Run x through a stack of routed matmuls, executing ``plan`` (built here
+    when not supplied).  A supplied plan's own config governs execution unless
+    ``config=`` overrides it.  ``policy=`` / ``use_pallas=`` /
+    ``fused_aggregation=`` / ``interpret=`` are deprecated overrides; use a
+    RuntimeConfig."""
+    if config is None and plan is not None:
+        config = plan.config
+    cfg = resolve_config(config, policy=policy, use_pallas=use_pallas,
+                         fused_aggregation=fused_aggregation, interpret=interpret)
+    if plan is None:
+        plan = plan_stack(x, weights, config=cfg)
+    else:
+        if len(plan.steps) != len(weights):
+            raise ValueError(
+                f"plan has {len(plan.steps)} steps but the stack has "
+                f"{len(weights)} layers — rebuild the plan for this stack")
+        m_eff = int(np.prod(x.shape[:-1], dtype=np.int64))
+        for step, w in zip(plan.steps, weights):
+            if (step.m, step.k, step.n) != (m_eff, int(w.shape[0]), int(w.shape[1])):
+                raise ValueError(
+                    f"plan step {step.name!r} was routed for shape "
+                    f"({step.m},{step.k},{step.n}) but the stack executes "
+                    f"({m_eff},{int(w.shape[0])},{int(w.shape[1])}) — a stale "
+                    "plan would silently diverge from the router; rebuild it")
     h = x
-    for w, act in zip(weights, activations):
-        if not fused_aggregation:
-            m, k = int(np.prod(h.shape[:-1])), h.shape[-1]
-            r = router.route_matmul(m, k, w.shape[-1], policy=policy)
-            if r.path == "arype":
-                if use_pallas:
-                    from repro.kernels.arype_matmul import arype_matmul_unfused
+    for step, w, act in zip(plan.steps, weights, activations):
+        if not cfg.fused_aggregation and step.engine == "arype":
+            k = h.shape[-1]
+            if cfg.use_pallas:
+                from repro.kernels.arype_matmul import arype_matmul_unfused
 
-                    h = arype_matmul_unfused(
-                        h.reshape(-1, k), w, activation=act or "none", interpret=interpret
-                    ).reshape(*h.shape[:-1], w.shape[-1])
-                else:
-                    h = _unfused_jnp(h, w, act)
-                continue
-        h = router.matmul(h, w, policy=policy, activation=act,
-                          use_pallas=use_pallas, interpret=interpret)
+                h = arype_matmul_unfused(
+                    h.reshape(-1, k), w, activation=act or "none", interpret=cfg.interpret
+                ).reshape(*h.shape[:-1], w.shape[-1])
+            else:
+                h = _unfused_jnp(h, w, act)
+            continue
+        h = router.matmul(h, w, activation=act, route=step.route, config=cfg)
     return h
 
 
@@ -163,18 +206,35 @@ class OctopusCycleModel:
         return LayerCost("arype", (m, k, n), "arype", compute, stall, mem, macs)
 
     def stack_report(
-        self, layers: Sequence[tuple[str, int, int, int]], *, collaborative: bool
+        self,
+        plan: Union[RoutePlan, Sequence[tuple[str, int, int, int]]],
+        *,
+        collaborative: bool,
+        config: Optional[RuntimeConfig] = None,
     ) -> dict:
-        """layers: (name, M, K, N).  Placement: the router decides (same policy
-        as the JAX execution path) when collaborative; everything on AryPE when
-        not (the 'straightforwardly inserted accelerator')."""
+        """Cost a placement plan.  ``plan`` is a :class:`RoutePlan` (the same
+        object the JAX path executes); a bare ``(name, M, K, N)`` layer list
+        is routed into one first — under ``config`` if given, else under the
+        router-decides policy as the legacy form always did (a forced ambient
+        policy would silently defeat the ``collaborative`` flag).  ``config``
+        applies only to that bare-list form: a :class:`RoutePlan` already
+        carries the config its routes were decided under.  Placement:
+        the plan's recorded routes when collaborative; everything on AryPE
+        when not (the 'straightforwardly inserted accelerator')."""
+        if not isinstance(plan, RoutePlan):
+            from repro.runtime import current_runtime
+
+            cfg = (config if config is not None
+                   else current_runtime().replace(policy="collaborative"))
+            plan = RoutePlan.from_layers(plan, config=cfg)
         hw = self.hw
         arype, vpe = [], []
-        for name, m, k, n in layers:
-            r = router.route_matmul(m, k, n, policy="collaborative")
-            engine = r.path if collaborative else "arype"
-            cost = self.matmul_cost(m, k, n, engine, collaborative)
-            (vpe if engine == "vpe" else arype).append((name, cost))
+        placements = {}
+        for step in plan.steps:
+            engine = step.engine if collaborative else "arype"
+            placements[step.name] = engine
+            cost = self.matmul_cost(step.m, step.k, step.n, engine, collaborative)
+            (vpe if engine == "vpe" else arype).append((step.name, cost))
         ary_cycles = sum(c.total_cycles for _, c in arype)
         vpe_cycles = sum(c.total_cycles for _, c in vpe)
         # Engines run concurrently in collaborative mode; serially otherwise.
@@ -185,6 +245,7 @@ class OctopusCycleModel:
         vpe_macs = sum(c.useful_macs for _, c in vpe)
         return {
             "collaborative": collaborative,
+            "placements": placements,
             "arype_eff": ary_macs / (ary_cycles * ary_peak) if ary_cycles else 0.0,
             "vpe_eff": vpe_macs / (vpe_cycles * vpe_peak) if vpe_cycles else 0.0,
             "total_cycles": total,
@@ -219,3 +280,11 @@ def usecase3_layers(f: int) -> list[tuple[str, int, int, int]]:
     ]:
         out.append((name, m * f, k, n))
     return out
+
+
+def usecase2_plan(f: int, *, config: Optional[RuntimeConfig] = None) -> RoutePlan:
+    return RoutePlan.from_layers(usecase2_layers(f), config=config)
+
+
+def usecase3_plan(f: int, *, config: Optional[RuntimeConfig] = None) -> RoutePlan:
+    return RoutePlan.from_layers(usecase3_layers(f), config=config)

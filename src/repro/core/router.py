@@ -5,75 +5,60 @@ router inspects the *static* operand shapes, evaluates the paper's systolic
 utilization model, and dispatches to one of the two engine paths:
 
   * **AryPE path** — MXU-aligned blocked matmul (throughput engine).  On a real
-    TPU with ``use_pallas=True`` this is the fused-accumulation Pallas kernel;
-    otherwise an XLA ``dot_general`` (which targets the MXU natively).
+    TPU with ``RuntimeConfig.use_pallas`` this is the fused-accumulation Pallas
+    kernel; otherwise an XLA ``dot_general`` (which targets the MXU natively).
   * **VPE path** — broadcast-multiply + lane-reduce (latency engine / small
-    shapes).  Shapes whose MXU utilization would fall below ``tau`` are
-    re-expressed as VPU work, exactly as Octopus offloads the CNN's first
-    layer to the SIMDU sub-lanes.
+    shapes).  Shapes whose MXU utilization would fall below the config's
+    ``tau`` are re-expressed as VPU work, exactly as Octopus offloads the
+    CNN's first layer to the SIMDU sub-lanes.
 
-The utilization model mirrors the paper's analysis: a (M,K)x(K,N) matmul on a
-``T×T`` systolic array achieves ``util = K/⌈K⌉_T · N/⌈N⌉_T`` MAC-occupancy
-(fill of the stationary tile), with an additional M-side penalty for streams
-shorter than the array's fill depth.  The paper's 32x32-array example — layer 1
-(10,3)x(3,32): 9.3% — is reproduced by this model (see tests).
+All tuning lives in :class:`repro.runtime.RuntimeConfig` — ambient via
+``with octopus_runtime(cfg):`` or passed explicitly as ``config=``.  The old
+``policy=`` / ``use_pallas=`` / ``interpret=`` / ``accum_dtype=`` kwargs are
+still accepted for one release as deprecated per-call overrides (they emit
+``DeprecationWarning``).  The utilization model itself lives in
+:mod:`repro.runtime.routing`; this module re-exports it so existing imports
+(``router.route_matmul``, ``router.mxu_utilization``, ...) keep working.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.util import ceil_div
+from repro.runtime import (
+    Route,
+    RuntimeConfig,
+    mxu_utilization,
+    resolve_config,
+    systolic_utilization,
+)
+from repro.runtime import routing as _routing
 
-# TPU MXU tile (the "systolic array size" of the target hardware).
-MXU = 128
-# Minimum stream length to fully hide the systolic fill latency.
-FILL_DEPTH = 8
-# Utilization threshold below which work routes to the VPE path.
-TAU = 0.35
-# VPE-path working-set cap (fp32 elements of the M*K*N product tile).
-VPE_MAX_ELEMS = 1 << 21
+__all__ = [
+    "Route",
+    "matmul",
+    "mxu_utilization",
+    "route_matmul",
+    "systolic_utilization",
+]
 
-
-@dataclass(frozen=True)
-class Route:
-    path: str  # "arype" | "vpe"
-    util: float
-    reason: str
-
-
-def systolic_utilization(m: int, k: int, n: int, array: int) -> float:
-    """The paper's utilization definition (§3.2.3): useful MACs over
-    array-slots x stream-cycles for an (m,k)x(k,n) matmul on an array x array
-    systolic grid.  Reproduces the paper's 9.3% for (10,3)x(3,32) on 32x32."""
-    kb, nb = ceil_div(k, array), ceil_div(n, array)
-    useful = m * k * n
-    slots = kb * nb * m * array * array
-    return useful / slots
+# Deprecated aliases for the old module globals — the live values are fields
+# of RuntimeConfig; these are kept only so old imports keep resolving.
+MXU = RuntimeConfig.mxu_tile
+FILL_DEPTH = RuntimeConfig.fill_depth
+TAU = RuntimeConfig.tau
+VPE_MAX_ELEMS = RuntimeConfig.vpe_max_elems
 
 
-def mxu_utilization(m: int, k: int, n: int, tile: int = MXU, fill: int = FILL_DEPTH) -> float:
-    """TPU routing cost model: stationary-tile fill (K, N padding waste) plus
-    the sublane granularity penalty on the streamed M dimension."""
-    fill_k = k / (ceil_div(k, tile) * tile)
-    fill_n = n / (ceil_div(n, tile) * tile)
-    stream = m / (ceil_div(m, fill) * fill)
-    return fill_k * fill_n * stream
-
-
-def route_matmul(m: int, k: int, n: int, *, policy: str = "collaborative") -> Route:
-    if policy == "arype_only":
-        return Route("arype", mxu_utilization(m, k, n), "forced")
-    if policy == "vpe_only":
-        return Route("vpe", mxu_utilization(m, k, n), "forced")
-    util = mxu_utilization(m, k, n)
-    if util < TAU and m * k * n <= VPE_MAX_ELEMS:
-        return Route("vpe", util, f"util {util:.3f} < {TAU} and working set fits VPU path")
-    return Route("arype", util, f"util {util:.3f}")
+def route_matmul(m: int, k: int, n: int, *, config: Optional[RuntimeConfig] = None,
+                 name: Optional[str] = None, policy: Optional[str] = None) -> Route:
+    """Placement decision for an (m,k)x(k,n) matmul.  ``policy=`` is a
+    deprecated override; prefer ``config=`` / the ambient runtime."""
+    cfg = resolve_config(config, policy=policy)
+    return _routing.route_matmul(m, k, n, config=cfg, name=name)
 
 
 def _vpe_mm(x: jax.Array, w: jax.Array, accum_dtype=jnp.float32) -> jax.Array:
@@ -92,42 +77,54 @@ def matmul(
     x: jax.Array,
     w: jax.Array,
     *,
-    policy: str = "collaborative",
     activation: Optional[str] = None,
     out_dtype=None,
-    use_pallas: bool = False,
-    interpret: bool = True,
-    accum_dtype=jnp.float32,
+    config: Optional[RuntimeConfig] = None,
+    route: Optional[Route] = None,
+    name: Optional[str] = None,
+    policy: Optional[str] = None,
+    use_pallas: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+    accum_dtype=None,
 ) -> jax.Array:
     """Routed matmul: x (..., M, K) @ w (K, N) -> (..., M, N).
 
-    ``use_pallas`` lowers through the Pallas engine kernels (TPU target;
-    validated with interpret=True on CPU).  Otherwise the two paths are
-    expressed in jnp so XLA emits MXU dots vs VPU mul+reduce respectively.
+    Placement and execution are governed by ``config`` (default: the ambient
+    :func:`repro.runtime.current_runtime`).  Pass ``route=`` to execute a
+    pre-decided :class:`Route` (e.g. a :class:`RoutePlan` step) instead of
+    re-deriving it.  ``policy`` / ``use_pallas`` / ``interpret`` /
+    ``accum_dtype`` are deprecated per-call overrides.
+
+    With ``config.use_pallas`` the call lowers through the Pallas engine
+    kernels (TPU target; validated with ``interpret=True`` on CPU).
+    Otherwise the two paths are expressed in jnp so XLA emits MXU dots vs
+    VPU mul+reduce respectively.
     """
+    cfg = resolve_config(config, policy=policy, use_pallas=use_pallas,
+                         interpret=interpret, accum_dtype=accum_dtype)
     *batch, m, k = x.shape
     k2, n = w.shape
     assert k == k2, (x.shape, w.shape)
     m_eff = int(np.prod(batch, dtype=np.int64)) * m if batch else m
-    r = route_matmul(m_eff, k, n, policy=policy)
+    r = route if route is not None else _routing.route_matmul(m_eff, k, n, config=cfg, name=name)
     out_dtype = out_dtype or x.dtype
+    acc = jnp.dtype(cfg.accum_dtype)
 
-    if use_pallas:
+    if cfg.use_pallas:
         x2 = x.reshape(-1, k)
         if r.path == "vpe":
             from repro.kernels.vpe_smallmm import vpe_matmul
 
             out = vpe_matmul(x2, w, activation=activation or "none",
-                             out_dtype=out_dtype, interpret=interpret)
+                             out_dtype=out_dtype, interpret=cfg.interpret)
         else:
             from repro.kernels.arype_matmul import arype_matmul
 
             out = arype_matmul(x2, w, activation=activation or "none",
-                               out_dtype=out_dtype, interpret=interpret)
+                               out_dtype=out_dtype, interpret=cfg.interpret)
         return out.reshape(*batch, m, n)
 
-    out = (_vpe_mm(x, w, accum_dtype) if r.path == "vpe"
-           else _arype_mm(x, w, accum_dtype))
+    out = _vpe_mm(x, w, acc) if r.path == "vpe" else _arype_mm(x, w, acc)
     if activation == "relu":
         out = jnp.maximum(out, 0.0)
     elif activation == "silu":

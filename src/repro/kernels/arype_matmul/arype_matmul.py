@@ -21,6 +21,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _mm_fused_kernel(x_ref, w_ref, o_ref, acc_ref, *, activation: str, n_k: int):
@@ -80,7 +81,7 @@ def mm_fused(
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype or x.dtype),
-        scratch_shapes=[pl.MemorySpace.ANY((bm, bn), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(x, w)
 

@@ -52,7 +52,7 @@ def active_param_count(cfg: ArchConfig, abstract_params: Any) -> int:
     total = _param_count(abstract_params)
     if not cfg.num_experts:
         return total
-    flat, _ = jax.tree.flatten_with_path(abstract_params)
+    flat, _ = jax.tree_util.tree_flatten_with_path(abstract_params)
     expert_params = sum(
         int(np.prod(leaf.shape)) for path, leaf in flat
         if any(k in jax.tree_util.keystr(path) for k in ("w_gate", "w_up", "w_down"))
@@ -74,12 +74,21 @@ def model_flops_for(cfg: ArchConfig, shape: ShapeSpec, abstract_params: Any) -> 
     return 2.0 * n_act * shape.global_batch  # decode: one token per sample
 
 
-def build_cell(arch: str, shape_name: str, mesh, *, use_pallas: bool = False,
+def build_cell(arch: str, shape_name: str, mesh, *, pallas: bool = False,
                overrides: Optional[dict] = None,
-               analysis_nsb: Optional[int] = None) -> Cell:
+               analysis_nsb: Optional[int] = None,
+               use_pallas: Optional[bool] = None) -> Cell:
+    if use_pallas is not None:  # deprecated spelling, one release
+        import warnings
+
+        warnings.warn("build_cell(use_pallas=...) is deprecated; use pallas=",
+                      DeprecationWarning, stacklevel=2)
+        pallas = use_pallas
     cfg = get_config(arch)
     if overrides:
         cfg = cfg.replace(**overrides)
+    if pallas:
+        cfg = cfg.replace(use_pallas=True)
     if analysis_nsb is not None:
         # HLO-cost-analysis mode: unrolled layers + naive attention + unrolled
         # chunk scans, truncated to `analysis_nsb` superblocks.  Total cost is

@@ -46,19 +46,19 @@ def _compile_cell(cell, mesh):
 
 
 def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str,
-             use_pallas: bool = False, overrides_json: str = "",
+             pallas: bool = False, overrides_json: str = "",
              analysis: bool = True, tag: str = "") -> dict:
     from repro.configs import get_config
     from repro.launch import mesh as meshmod
     from repro.launch.cells import build_cell
-    from repro.launch.roofline import analyze_compiled, parse_collectives
+    from repro.launch.roofline import analyze_compiled, cost_dict, parse_collectives
 
     mesh = meshmod.make_production_mesh(multi_pod=(mesh_kind == "multi"))
     chips = mesh.devices.size
     overrides = json.loads(overrides_json) if overrides_json else None
 
     # 1. PRODUCTION compile: proves the distribution config; memory analysis.
-    cell = build_cell(arch, shape, mesh, use_pallas=use_pallas, overrides=overrides)
+    cell = build_cell(arch, shape, mesh, pallas=pallas, overrides=overrides)
     compiled, dt = _compile_cell(cell, mesh)
     rf = analyze_compiled(cell.label, mesh_kind, chips, compiled,
                           cell.model_flops, dt, cell.notes)
@@ -71,10 +71,10 @@ def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str,
         nsb = get_config(arch).num_superblocks
         costs = {}
         for n in (1, 2):
-            acell = build_cell(arch, shape, mesh, use_pallas=use_pallas,
+            acell = build_cell(arch, shape, mesh, pallas=pallas,
                                overrides=overrides, analysis_nsb=n)
             acomp, adt = _compile_cell(acell, mesh)
-            ca = acomp.cost_analysis()
+            ca = cost_dict(acomp)
             coll = parse_collectives(acomp.as_text(), chips)
             costs[n] = dict(
                 flops=float(ca.get("flops", 0.0)),
@@ -183,7 +183,7 @@ def main():
     meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
     for mk in meshes:
         run_cell(args.arch, args.shape, mk, args.out,
-                 use_pallas=args.use_pallas, overrides_json=args.overrides,
+                 pallas=args.use_pallas, overrides_json=args.overrides,
                  tag=args.tag, analysis=not args.no_analysis)
 
 

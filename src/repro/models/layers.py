@@ -20,6 +20,7 @@ from repro.configs.base import ArchConfig
 from repro.core import router
 from repro.distributed.act import shard_act
 from repro.models.spec import ParamSpec
+from repro.runtime import RuntimeConfig
 
 NEG_INF = -1e30
 
@@ -167,6 +168,7 @@ def attention_core(
     v: jax.Array,
     *,
     kind: str,  # causal|local|full
+    cfg: Optional[ArchConfig] = None,  # pulls window/use_pallas/impl/unroll/av_dtype
     window: int = 0,
     chunk_q: int = 512,
     chunk_kv: int = 512,
@@ -175,6 +177,9 @@ def attention_core(
     unroll: bool = False,
     av_dtype="float32",
 ) -> jax.Array:
+    if cfg is not None:
+        window, use_pallas, impl = cfg.window_size, cfg.use_pallas, cfg.attn_impl
+        unroll, av_dtype = cfg.inner_unroll, cfg.attn_av_dtype
     b, s, hq, dh = q.shape
     hkv = k.shape[2]
     g = hq // hkv
@@ -289,9 +294,11 @@ def attn_apply(
     mode: str = "train",  # train | prefill | decode
 ) -> tuple[jax.Array, Optional[AttnCache]]:
     b, s, d = x.shape
-    mm = functools.partial(router.matmul, policy=cfg.router_policy,
-                           use_pallas=False, out_dtype=x.dtype,
-                           accum_dtype=jnp.dtype(cfg.matmul_accum_dtype))
+    # Projections stay on the dot path even under cfg.use_pallas: the Pallas
+    # budget of this layer goes to the flash-attention kernel, not the QKV/O
+    # matmuls (same split as the pre-runtime code).
+    mm = functools.partial(router.matmul, out_dtype=x.dtype,
+                           config=RuntimeConfig.from_arch(cfg, use_pallas=False))
     h = rms_norm(x, p["ln"])
     q = mm(h, p["wq"]).reshape(b, s, cfg.num_heads, cfg.head_dim)
     q = shard_act(q, "batch", None, "heads", None)
@@ -309,7 +316,7 @@ def attn_apply(
         if cfg.use_qk_norm:
             q = rms_norm(q, p["q_norm"])
             k = rms_norm(k, p["k_norm"]) if mode != "decode" else k
-        out = attention_core(q, k, v, kind="full")
+        out = attention_core(q, k, v, kind="full", cfg=cfg)
         out = mm(out.reshape(b, s, cfg.q_dim), p["wo"])
         return x + out, (new_cache if mode != "train" else None)
 
@@ -330,15 +337,11 @@ def attn_apply(
     ]
     new_cache = None
     if mode == "train":
-        out = attention_core(q, k, v, kind=attn_kind, window=cfg.window_size,
-                             use_pallas=cfg.use_pallas, impl=cfg.attn_impl,
-                             unroll=cfg.inner_unroll, av_dtype=cfg.attn_av_dtype)
+        out = attention_core(q, k, v, kind=attn_kind, cfg=cfg)
     elif mode == "prefill":
         assert cache is not None and lengths is not None
         new_cache = cache_write(cache, k, v, lengths, kind=attn_kind, window=cfg.window_size)
-        out = attention_core(q, k, v, kind=attn_kind, window=cfg.window_size,
-                             use_pallas=cfg.use_pallas, impl=cfg.attn_impl,
-                             unroll=cfg.inner_unroll, av_dtype=cfg.attn_av_dtype)
+        out = attention_core(q, k, v, kind=attn_kind, cfg=cfg)
     else:  # decode
         assert cache is not None and lengths is not None
         new_cache = cache_write(cache, k, v, lengths, kind=attn_kind, window=cfg.window_size)
@@ -365,8 +368,8 @@ def mlp_specs(cfg: ArchConfig, d_ff: Optional[int] = None) -> dict:
 
 
 def mlp_apply(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
-    mm = functools.partial(router.matmul, policy=cfg.router_policy, out_dtype=x.dtype,
-                           accum_dtype=jnp.dtype(cfg.matmul_accum_dtype))
+    mm = functools.partial(router.matmul, out_dtype=x.dtype,
+                           config=RuntimeConfig.from_arch(cfg))
     h = rms_norm(x, p["ln"])
     if cfg.mlp_gated:
         gate = shard_act(mm(h, p["wi_gate"], activation="silu"), "batch", None, "mlp")
@@ -479,8 +482,8 @@ def moe_apply(p: dict, x: jax.Array, cfg: ArchConfig,
     y = shard_act(y, "batch", None, None).astype(x.dtype)
 
     if cfg.num_shared_experts:
-        mm = functools.partial(router.matmul, policy=cfg.router_policy, out_dtype=x.dtype,
-                               accum_dtype=jnp.dtype(cfg.matmul_accum_dtype))
+        mm = functools.partial(router.matmul, out_dtype=x.dtype,
+                               config=RuntimeConfig.from_arch(cfg))
         sg = mm(hg, p["sh_gate"], activation="silu")
         su = mm(hg, p["sh_up"])
         y = y + mm(sg * su, p["sh_down"])

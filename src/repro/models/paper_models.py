@@ -13,6 +13,10 @@
 All matmuls go through the Octopus router; conv layers are lowered via
 img2col so the placement matches the paper's matrix-multiplication mapping
 exactly ((20f,3)x(3,32), (10f,96)x(96,32), ...).
+
+Tuning comes from the ambient :mod:`repro.runtime` config (or an explicit
+``config=``); the old ``policy=`` / ``use_pallas=`` / ``fused_aggregation=``
+kwargs survive one release as deprecated overrides.
 """
 from __future__ import annotations
 
@@ -26,6 +30,7 @@ import numpy as np
 from repro.common.util import ceil_div, fold_in_str
 from repro.core import router
 from repro.models.spec import ParamSpec, init_params, logical_axes
+from repro.runtime import RuntimeConfig, octopus_runtime, resolve_config
 
 
 # ---------------------------------------------------------------------------
@@ -43,17 +48,18 @@ def mlp_specs() -> dict:
     return specs
 
 
-def mlp_apply(params: dict, x: jax.Array, *, policy: str = "collaborative",
-              use_pallas: bool = False) -> jax.Array:
-    h = x
-    n = len(MLP_DIMS) - 1
-    for i in range(n):
-        act = "relu" if i < n - 1 else None
-        h = router.matmul(h, params[f"w{i}"], policy=policy, activation=None,
-                          use_pallas=use_pallas) + params[f"b{i}"]
-        if act == "relu":
-            h = jnp.maximum(h, 0.0)
-    return h
+def mlp_apply(params: dict, x: jax.Array, *, config: Optional[RuntimeConfig] = None,
+              policy: Optional[str] = None, use_pallas: Optional[bool] = None) -> jax.Array:
+    cfg = resolve_config(config, policy=policy, use_pallas=use_pallas)
+    with octopus_runtime(cfg):
+        h = x
+        n = len(MLP_DIMS) - 1
+        for i in range(n):
+            act = "relu" if i < n - 1 else None
+            h = router.matmul(h, params[f"w{i}"], name=f"w{i}") + params[f"b{i}"]
+            if act == "relu":
+                h = jnp.maximum(h, 0.0)
+        return h
 
 
 # ---------------------------------------------------------------------------
@@ -97,30 +103,31 @@ def cnn_specs() -> dict:
     return specs
 
 
-def cnn_apply(params: dict, x: jax.Array, *, policy: str = "collaborative",
-              use_pallas: bool = False, fused_aggregation: bool = True) -> jax.Array:
+def cnn_apply(params: dict, x: jax.Array, *, config: Optional[RuntimeConfig] = None,
+              policy: Optional[str] = None, use_pallas: Optional[bool] = None,
+              fused_aggregation: Optional[bool] = None) -> jax.Array:
     """x: (F, 20) interval vectors -> logits (F, 162)."""
     from repro.core.collaborative import _unfused_jnp
 
-    h = x[..., :, None].astype(jnp.float32)  # (F, 20, 1)
-    for i in range(len(CNN_CHANNELS) - 1):
-        cols = _img2col_1d(h, CNN_KERNEL)  # (F, L, k*ci) == the paper's (w, ic*s)
-        w = params[f"conv{i}"]
-        if fused_aggregation:
-            h = router.matmul(cols, w, policy=policy, use_pallas=use_pallas)
-        else:
-            m = int(np.prod(cols.shape[:-1]))
-            r = router.route_matmul(m, w.shape[0], w.shape[1], policy=policy)
-            h = (_unfused_jnp(cols, w, None) if r.path == "arype"
-                 else router.matmul(cols, w, policy=policy))
-        h = jnp.maximum(h + params[f"convb{i}"], 0.0)
-        h = _ceil_pool(h)
-    h = h.reshape(h.shape[0], -1)  # (F, 96)
-    h = jnp.maximum(
-        router.matmul(h, params["fc_w"], policy=policy, use_pallas=use_pallas)
-        + params["fc_b"], 0.0)
-    return router.matmul(h, params["out_w"], policy=policy,
-                         use_pallas=use_pallas) + params["out_b"]
+    cfg = resolve_config(config, policy=policy, use_pallas=use_pallas,
+                         fused_aggregation=fused_aggregation)
+    with octopus_runtime(cfg):
+        h = x[..., :, None].astype(jnp.float32)  # (F, 20, 1)
+        for i in range(len(CNN_CHANNELS) - 1):
+            cols = _img2col_1d(h, CNN_KERNEL)  # (F, L, k*ci) == the paper's (w, ic*s)
+            w = params[f"conv{i}"]
+            if cfg.fused_aggregation:
+                h = router.matmul(cols, w, name=f"conv{i + 1}")
+            else:
+                m = int(np.prod(cols.shape[:-1]))
+                r = router.route_matmul(m, w.shape[0], w.shape[1], name=f"conv{i + 1}")
+                h = (_unfused_jnp(cols, w, None) if r.path == "arype"
+                     else router.matmul(cols, w, route=r))
+            h = jnp.maximum(h + params[f"convb{i}"], 0.0)
+            h = _ceil_pool(h)
+        h = h.reshape(h.shape[0], -1)  # (F, 96)
+        h = jnp.maximum(router.matmul(h, params["fc_w"], name="fc") + params["fc_b"], 0.0)
+        return router.matmul(h, params["out_w"], name="linear") + params["out_b"]
 
 
 # ---------------------------------------------------------------------------
@@ -148,21 +155,25 @@ def transformer_specs() -> dict:
     }
 
 
-def transformer_apply(params: dict, payload: jax.Array, *, policy: str = "collaborative",
-                      use_pallas: bool = False) -> jax.Array:
+def transformer_apply(params: dict, payload: jax.Array, *,
+                      config: Optional[RuntimeConfig] = None,
+                      policy: Optional[str] = None,
+                      use_pallas: Optional[bool] = None) -> jax.Array:
     """payload: (F, 15, 16) normalized byte matrix -> logits (F, 162)."""
-    mm = functools.partial(router.matmul, policy=policy, use_pallas=use_pallas)
-    x = payload.astype(jnp.float32)
-    q = mm(x, params["wq"])  # (F,15,64)   [(15,16)x(16,64)]
-    k = mm(x, params["wk"])
-    v = mm(x, params["wv"])
-    s = jnp.einsum("fqd,fkd->fqk", q, k) / np.sqrt(TF_DK)  # [(15,64)x(64,15)]
-    a = jax.nn.softmax(s, axis=-1)
-    h = jnp.einsum("fqk,fkd->fqd", a, v)  # [(15,15)x(15,64)]
-    h = jnp.maximum(mm(h, params["mlp1"]) + params["mlp1_b"], 0.0)
-    h = mm(h, params["mlp2"]) + params["mlp2_b"]
-    pooled = h.mean(axis=1)
-    return mm(pooled, params["cls_w"]) + params["cls_b"]
+    cfg = resolve_config(config, policy=policy, use_pallas=use_pallas)
+    with octopus_runtime(cfg):
+        mm = router.matmul
+        x = payload.astype(jnp.float32)
+        q = mm(x, params["wq"], name="wq")  # (F,15,64)   [(15,16)x(16,64)]
+        k = mm(x, params["wk"], name="wk")
+        v = mm(x, params["wv"], name="wv")
+        s = jnp.einsum("fqd,fkd->fqk", q, k) / np.sqrt(TF_DK)  # [(15,64)x(64,15)]
+        a = jax.nn.softmax(s, axis=-1)
+        h = jnp.einsum("fqk,fkd->fqd", a, v)  # [(15,15)x(15,64)]
+        h = jnp.maximum(mm(h, params["mlp1"], name="mlp1") + params["mlp1_b"], 0.0)
+        h = mm(h, params["mlp2"], name="mlp2") + params["mlp2_b"]
+        pooled = h.mean(axis=1)
+        return mm(pooled, params["cls_w"], name="cls") + params["cls_b"]
 
 
 def init_paper_model(kind: str, key: jax.Array) -> dict:

@@ -22,6 +22,7 @@ from repro.configs.base import ArchConfig
 from repro.core import router
 from repro.distributed.act import shard_act
 from repro.models.layers import rms_norm
+from repro.runtime import RuntimeConfig
 from repro.models.spec import ParamSpec
 
 
@@ -133,7 +134,8 @@ def mamba2_apply(
     bsz, s, d = x.shape
     din, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
     pdim = cfg.ssm_head_dim
-    mm = functools.partial(router.matmul, policy=cfg.router_policy, out_dtype=x.dtype)
+    mm = functools.partial(router.matmul, out_dtype=x.dtype,
+                           config=RuntimeConfig.from_arch(cfg))
     hin = rms_norm(x, p["ln"])
     proj = mm(hin, p["in_proj"])
     z, xs, b_in, c_in, dt = jnp.split(proj, [din, 2 * din, 2 * din + n, 2 * din + 2 * n], axis=-1)
@@ -286,7 +288,8 @@ def mlstm_apply(
     bsz, s, d = x.shape
     din, h = cfg.mlstm_d_inner, cfg.num_heads
     dk = din // h
-    mm = functools.partial(router.matmul, policy=cfg.router_policy, out_dtype=x.dtype)
+    mm = functools.partial(router.matmul, out_dtype=x.dtype,
+                           config=RuntimeConfig.from_arch(cfg))
     hin = rms_norm(x, p["ln"])
     up = mm(hin, p["w_up"])
     xs, z = jnp.split(up, 2, axis=-1)  # cell path, gate path
@@ -368,7 +371,8 @@ def slstm_apply(
     bsz, s, d = x.shape
     h = cfg.num_heads
     hd = d // h
-    mm = functools.partial(router.matmul, policy=cfg.router_policy, out_dtype=x.dtype)
+    mm = functools.partial(router.matmul, out_dtype=x.dtype,
+                           config=RuntimeConfig.from_arch(cfg))
     hin = rms_norm(x, p["ln"])
     wx = mm(hin, p["w_gates"]).reshape(bsz, s, h, 4 * hd)
     st0 = cache if cache is not None else init_slstm_cache(cfg, bsz)

@@ -24,6 +24,7 @@ from repro.core import router
 from repro.distributed.act import shard_act
 from repro.models import recurrent as rec
 from repro.models import spec as pspec
+from repro.runtime import RuntimeConfig
 from repro.models.layers import (
     AttnCache,
     attn_apply,
@@ -231,8 +232,8 @@ def _embed_input(params: dict, cfg: ArchConfig, batch: dict) -> jax.Array:
 
 def _logits(params: dict, cfg: ArchConfig, h: jax.Array) -> jax.Array:
     h = rms_norm(h, params["final_norm"])
-    logits = router.matmul(h, params["lm_head"], policy=cfg.router_policy,
-                           out_dtype=jnp.float32)
+    logits = router.matmul(h, params["lm_head"], out_dtype=jnp.float32,
+                           config=RuntimeConfig.from_arch(cfg), name="lm_head")
     logits = shard_act(logits, "batch", None, "vocab")
     if cfg.padded_vocab != cfg.vocab_size:
         pad = cfg.padded_vocab - cfg.vocab_size

@@ -1,0 +1,45 @@
+"""Unified Octopus runtime: one config, one placement plan, one API.
+
+    from repro.runtime import RuntimeConfig, octopus_runtime, RoutePlan
+
+    with octopus_runtime(RuntimeConfig(policy="collaborative", tau=0.35)):
+        y = router.matmul(x, w)                       # ambient config
+    plan = RoutePlan.trace(fn, abstract_x)            # shared placement truth
+    print(plan.explain())
+"""
+from repro.runtime.config import (
+    DEFAULT_RUNTIME,
+    POLICIES,
+    RuntimeConfig,
+    current_runtime,
+    octopus_runtime,
+    resolve_config,
+    runtime_overrides,
+)
+from repro.runtime.plan import PlannedMatmul, RoutePlan
+from repro.runtime.routing import (
+    Route,
+    RouteRecord,
+    mxu_utilization,
+    record_routes,
+    route_matmul,
+    systolic_utilization,
+)
+
+__all__ = [
+    "DEFAULT_RUNTIME",
+    "POLICIES",
+    "PlannedMatmul",
+    "Route",
+    "RouteRecord",
+    "RoutePlan",
+    "RuntimeConfig",
+    "current_runtime",
+    "mxu_utilization",
+    "octopus_runtime",
+    "record_routes",
+    "resolve_config",
+    "route_matmul",
+    "runtime_overrides",
+    "systolic_utilization",
+]

@@ -1,0 +1,147 @@
+"""The Octopus runtime configuration (paper §2.3, §3.2.3).
+
+One frozen :class:`RuntimeConfig` holds every knob that used to be threaded
+through the call stack as ad-hoc kwargs (``policy=``, ``use_pallas=``,
+``interpret=``, ``fused_aggregation=``) or frozen as module globals (``TAU``,
+``MXU``, ``FILL_DEPTH``, ``VPE_MAX_ELEMS``).  The active config is ambient:
+
+    from repro.runtime import RuntimeConfig, octopus_runtime
+
+    with octopus_runtime(RuntimeConfig(policy="arype_only")):
+        y = router.matmul(x, w)          # no tuning kwargs anywhere
+
+Precedence, highest first:
+  1. deprecated explicit kwargs on ``router.matmul`` etc. (one release only)
+  2. an explicit ``config=`` argument
+  3. the innermost ``octopus_runtime`` / ``runtime_overrides`` context
+  4. :data:`DEFAULT_RUNTIME`
+
+The context is a :class:`contextvars.ContextVar`, so nesting, threads and
+async all behave.  Configs only influence *trace-time* routing decisions;
+note that ``jax.jit`` caches by argument shapes, not by ambient context, so
+a jitted callable must be traced under the config it should keep (the
+serving paths capture their config at construction time for exactly this
+reason).
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from contextlib import contextmanager
+from contextvars import ContextVar
+from dataclasses import dataclass
+from typing import Any, Iterator, Optional
+
+POLICIES = ("collaborative", "arype_only", "vpe_only")
+
+
+@dataclass(frozen=True)
+class RuntimeConfig:
+    """Placement + execution knobs for the routed compute core.
+
+    Routing (paper's placement policy):
+      * ``policy`` — "collaborative" (router decides), "arype_only", "vpe_only".
+      * ``tau`` — MXU-utilization threshold below which work routes to VPE.
+      * ``mxu_tile`` — systolic array edge of the target hardware.
+      * ``fill_depth`` — minimum stream length to hide systolic fill latency.
+      * ``vpe_max_elems`` — VPE-path working-set cap (M*K*N fp32 elements).
+
+    Execution:
+      * ``use_pallas`` — lower through the Pallas engine kernels.
+      * ``interpret`` — Pallas interpret mode (True for CPU validation).
+      * ``accum_dtype`` — accumulation dtype name for both engine paths.
+      * ``fused_aggregation`` — fuse K-block partial aggregation (False
+        reproduces the paper's "wo/ collaborating" ablation).
+    """
+
+    policy: str = "collaborative"
+    tau: float = 0.35
+    mxu_tile: int = 128
+    fill_depth: int = 8
+    vpe_max_elems: int = 1 << 21
+    use_pallas: bool = False
+    interpret: bool = True
+    accum_dtype: str = "float32"
+    fused_aggregation: bool = True
+
+    def __post_init__(self):
+        if self.policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}, got {self.policy!r}")
+        if not 0.0 < self.tau <= 1.0:
+            raise ValueError(f"tau must be in (0, 1], got {self.tau}")
+        if self.mxu_tile <= 0 or self.fill_depth <= 0 or self.vpe_max_elems <= 0:
+            raise ValueError("mxu_tile, fill_depth and vpe_max_elems must be positive")
+
+    def replace(self, **overrides: Any) -> "RuntimeConfig":
+        return dataclasses.replace(self, **overrides) if overrides else self
+
+    @classmethod
+    def from_arch(cls, arch: Any, **overrides: Any) -> "RuntimeConfig":
+        """Derive a runtime config from a model ArchConfig (duck-typed so the
+        runtime package never imports ``repro.configs``).
+
+        ``interpret`` is inherited from the ambient runtime (default True,
+        which is what host/CPU emulation — including the dryrun's forced host
+        platform — needs).  A real-TPU launch must run inside
+        ``runtime_overrides(interpret=False)`` until platform-derived defaults
+        land (see ROADMAP)."""
+        base = current_runtime()
+        kw = {
+            "policy": getattr(arch, "router_policy", base.policy),
+            "accum_dtype": getattr(arch, "matmul_accum_dtype", base.accum_dtype),
+            "use_pallas": getattr(arch, "use_pallas", base.use_pallas),
+        }
+        kw.update(overrides)
+        return base.replace(**kw)
+
+
+DEFAULT_RUNTIME = RuntimeConfig()
+
+_active: ContextVar[RuntimeConfig] = ContextVar("octopus_runtime", default=DEFAULT_RUNTIME)
+
+
+def current_runtime() -> RuntimeConfig:
+    """The innermost active config (or :data:`DEFAULT_RUNTIME`)."""
+    return _active.get()
+
+
+@contextmanager
+def octopus_runtime(config: RuntimeConfig) -> Iterator[RuntimeConfig]:
+    """Make ``config`` the ambient runtime within the block."""
+    token = _active.set(config)
+    try:
+        yield config
+    finally:
+        _active.reset(token)
+
+
+@contextmanager
+def runtime_overrides(**overrides: Any) -> Iterator[RuntimeConfig]:
+    """Like :func:`octopus_runtime` but patches only the given fields of the
+    currently active config (nesting composes)."""
+    with octopus_runtime(current_runtime().replace(**overrides)) as cfg:
+        yield cfg
+
+
+def resolve_config(config: Optional[RuntimeConfig] = None, **deprecated: Any) -> RuntimeConfig:
+    """Resolve ``config`` (or the ambient runtime) plus deprecated explicit
+    kwarg overrides; warns once per call for any non-None deprecated kwarg.
+
+    ``accum_dtype`` values are normalized to dtype names so callers may keep
+    passing ``jnp.float32`` etc.
+    """
+    cfg = config if config is not None else current_runtime()
+    live = {k: v for k, v in deprecated.items() if v is not None}
+    if live:
+        if "accum_dtype" in live:
+            import numpy as np
+
+            live["accum_dtype"] = np.dtype(live["accum_dtype"]).name
+        warnings.warn(
+            f"explicit {sorted(live)} kwargs are deprecated; pass a RuntimeConfig "
+            "via config= or enter `with octopus_runtime(cfg):` instead",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+        cfg = cfg.replace(**live)
+    return cfg

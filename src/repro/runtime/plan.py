@@ -1,0 +1,127 @@
+"""RoutePlan — the single source of truth for matmul placement.
+
+A :class:`RoutePlan` records, per matmul of a layer stack, the shape and the
+router's :class:`Route` decision under one :class:`RuntimeConfig`.  The same
+plan drives
+
+  (a) the JAX execution path (``collaborative_forward`` executes a plan's
+      recorded routes instead of re-deriving them),
+  (b) the analytical FPGA cycle model (``OctopusCycleModel.stack_report``
+      consumes a plan, so the model can never silently diverge from the
+      execution placement), and
+  (c) the human-readable placement report, :meth:`RoutePlan.explain`.
+
+Plans are built either from explicit layer shapes::
+
+    plan = RoutePlan.from_layers(usecase2_layers(1000))
+
+or by tracing any JAX callable abstractly (no FLOPs are executed; every
+``router.matmul`` along the way reports its decision)::
+
+    plan = RoutePlan.trace(lambda x: cnn_apply(params, x),
+                           jax.ShapeDtypeStruct((1000, 20), jnp.float32))
+    print(plan.explain())
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.runtime import routing
+from repro.runtime.config import RuntimeConfig, current_runtime, octopus_runtime
+
+
+@dataclass(frozen=True)
+class PlannedMatmul:
+    name: str
+    m: int
+    k: int
+    n: int
+    route: routing.Route
+
+    @property
+    def shape(self) -> Tuple[int, int, int]:
+        return (self.m, self.k, self.n)
+
+    @property
+    def engine(self) -> str:
+        return self.route.path
+
+    @property
+    def macs(self) -> int:
+        return self.m * self.k * self.n
+
+
+@dataclass(frozen=True)
+class RoutePlan:
+    """An ordered, immutable placement plan for a stack of matmuls."""
+
+    config: RuntimeConfig
+    steps: Tuple[PlannedMatmul, ...]
+
+    # ------------------------------------------------------------- builders
+    @classmethod
+    def from_layers(cls, layers: Sequence[Tuple[str, int, int, int]],
+                    *, config: Optional[RuntimeConfig] = None) -> "RoutePlan":
+        """Build a plan from explicit ``(name, M, K, N)`` layer shapes."""
+        cfg = config if config is not None else current_runtime()
+        steps = tuple(
+            PlannedMatmul(name, m, k, n, routing.route_matmul(m, k, n, config=cfg))
+            for name, m, k, n in layers
+        )
+        return cls(cfg, steps)
+
+    @classmethod
+    def trace(cls, fn: Callable, *args: Any, config: Optional[RuntimeConfig] = None,
+              **kwargs: Any) -> "RoutePlan":
+        """Abstractly evaluate ``fn(*args)`` (``jax.ShapeDtypeStruct`` args are
+        fine) under ``config`` and record every routed matmul it performs."""
+        import jax
+
+        cfg = config if config is not None else current_runtime()
+        with octopus_runtime(cfg), routing.record_routes() as records:
+            jax.eval_shape(fn, *args, **kwargs)
+        steps = tuple(
+            PlannedMatmul(r.name or f"mm{i}", r.m, r.k, r.n, r.route)
+            for i, r in enumerate(records)
+        )
+        return cls(cfg, steps)
+
+    # -------------------------------------------------------------- queries
+    def __len__(self) -> int:
+        return len(self.steps)
+
+    def __iter__(self):
+        return iter(self.steps)
+
+    def layers(self) -> List[Tuple[str, int, int, int]]:
+        return [(s.name, s.m, s.k, s.n) for s in self.steps]
+
+    def engines(self) -> Dict[str, str]:
+        """``{step name: engine}`` placement map."""
+        return {s.name: s.engine for s in self.steps}
+
+    def macs(self, engine: Optional[str] = None) -> int:
+        return sum(s.macs for s in self.steps if engine is None or s.engine == engine)
+
+    # -------------------------------------------------------------- report
+    def explain(self) -> str:
+        """Human-readable placement report."""
+        cfg = self.config
+        head = (f"RoutePlan: {len(self.steps)} matmuls | policy={cfg.policy} "
+                f"tau={cfg.tau} mxu_tile={cfg.mxu_tile} fill_depth={cfg.fill_depth}")
+        if not self.steps:
+            return head + "\n  (empty)"
+        name_w = max(len(s.name) for s in self.steps)
+        shape_w = max(len(f"({s.m},{s.k},{s.n})") for s in self.steps)
+        lines = [head]
+        for s in self.steps:
+            shape = f"({s.m},{s.k},{s.n})"
+            lines.append(f"  {s.name:<{name_w}}  {shape:<{shape_w}}  "
+                         f"{s.engine:<5}  util={s.route.util:6.3f}  {s.route.reason}")
+        total = self.macs() or 1
+        ary, vpe = self.macs("arype"), self.macs("vpe")
+        n_ary = sum(1 for s in self.steps if s.engine == "arype")
+        lines.append(f"  -- arype: {n_ary} matmuls ({100 * ary / total:.1f}% of MACs) | "
+                     f"vpe: {len(self.steps) - n_ary} matmuls ({100 * vpe / total:.1f}% of MACs)")
+        return "\n".join(lines)

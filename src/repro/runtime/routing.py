@@ -1,0 +1,95 @@
+"""Placement routing (paper §2.3, §3.2.3): the utilization model and the
+per-matmul :class:`Route` decision, parameterized by :class:`RuntimeConfig`
+instead of module globals.
+
+The utilization model mirrors the paper's analysis: a (M,K)x(K,N) matmul on a
+``T×T`` systolic array achieves ``util = K/⌈K⌉_T · N/⌈N⌉_T`` MAC-occupancy
+(fill of the stationary tile), with an additional M-side penalty for streams
+shorter than the array's fill depth.  The paper's 32x32-array example — layer 1
+(10,3)x(3,32): 9.3% — is reproduced by this model (see tests).
+
+While a :func:`record_routes` block is active every decision is appended to
+the recorder — that is how :class:`repro.runtime.plan.RoutePlan` observes a
+model trace without the model knowing about plans.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from contextvars import ContextVar
+from dataclasses import dataclass
+from typing import Iterator, List, Optional
+
+from repro.common.util import ceil_div
+from repro.runtime.config import RuntimeConfig, current_runtime
+
+
+@dataclass(frozen=True)
+class Route:
+    path: str  # "arype" | "vpe"
+    util: float
+    reason: str
+
+
+@dataclass(frozen=True)
+class RouteRecord:
+    """One recorded placement decision (name may be auto-assigned later)."""
+
+    name: Optional[str]
+    m: int
+    k: int
+    n: int
+    route: Route
+
+
+_recorder: ContextVar[Optional[List[RouteRecord]]] = ContextVar("route_recorder", default=None)
+
+
+@contextmanager
+def record_routes() -> Iterator[List[RouteRecord]]:
+    """Collect every :func:`route_matmul` decision made inside the block."""
+    records: List[RouteRecord] = []
+    token = _recorder.set(records)
+    try:
+        yield records
+    finally:
+        _recorder.reset(token)
+
+
+def systolic_utilization(m: int, k: int, n: int, array: int) -> float:
+    """The paper's utilization definition (§3.2.3): useful MACs over
+    array-slots x stream-cycles for an (m,k)x(k,n) matmul on an array x array
+    systolic grid.  Reproduces the paper's 9.3% for (10,3)x(3,32) on 32x32."""
+    kb, nb = ceil_div(k, array), ceil_div(n, array)
+    useful = m * k * n
+    slots = kb * nb * m * array * array
+    return useful / slots
+
+
+def mxu_utilization(m: int, k: int, n: int, tile: int = RuntimeConfig.mxu_tile,
+                    fill: int = RuntimeConfig.fill_depth) -> float:
+    """TPU routing cost model: stationary-tile fill (K, N padding waste) plus
+    the sublane granularity penalty on the streamed M dimension."""
+    fill_k = k / (ceil_div(k, tile) * tile)
+    fill_n = n / (ceil_div(n, tile) * tile)
+    stream = m / (ceil_div(m, fill) * fill)
+    return fill_k * fill_n * stream
+
+
+def route_matmul(m: int, k: int, n: int, *, config: Optional[RuntimeConfig] = None,
+                 name: Optional[str] = None) -> Route:
+    """Decide the engine for an (m,k)x(k,n) matmul under ``config`` (ambient
+    runtime when None).  Records the decision if a plan trace is active."""
+    cfg = config if config is not None else current_runtime()
+    util = mxu_utilization(m, k, n, tile=cfg.mxu_tile, fill=cfg.fill_depth)
+    if cfg.policy == "arype_only":
+        route = Route("arype", util, "forced")
+    elif cfg.policy == "vpe_only":
+        route = Route("vpe", util, "forced")
+    elif util < cfg.tau and m * k * n <= cfg.vpe_max_elems:
+        route = Route("vpe", util, f"util {util:.3f} < {cfg.tau} and working set fits VPU path")
+    else:
+        route = Route("arype", util, f"util {util:.3f}")
+    records = _recorder.get()
+    if records is not None:
+        records.append(RouteRecord(name, m, k, n, route))
+    return route

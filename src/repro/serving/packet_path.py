@@ -29,6 +29,7 @@ from repro.core.feature_extractor import (
 )
 from repro.core.flow_tracker import PacketBatch
 from repro.models import paper_models
+from repro.runtime import RoutePlan, RuntimeConfig, resolve_config
 
 
 @dataclass
@@ -47,16 +48,28 @@ class PathStats:
 
 
 class PacketPath:
-    """Use-case 1: per-packet MLP intrusion detection."""
+    """Use-case 1: per-packet MLP intrusion detection.
 
-    def __init__(self, params: Any, *, policy: str = "collaborative"):
+    The runtime config is captured at construction (``config=`` or the then-
+    ambient runtime) and baked into the jit'd callable — jit caches by shapes,
+    not by ambient context, so later context changes must not retune it."""
+
+    def __init__(self, params: Any, *, config: Optional[RuntimeConfig] = None,
+                 policy: Optional[str] = None):
         self.params = params
+        self.runtime = resolve_config(config, policy=policy)
         self.rules = decisions.RuleTable()
         self._infer = jax.jit(
             lambda p, x: decisions.decide_binary(
-                paper_models.mlp_apply(p, x, policy=policy))
+                paper_models.mlp_apply(p, x, config=self.runtime))
         )
         self.stats = PathStats()
+
+    def route_plan(self, batch: int = 1) -> RoutePlan:
+        """Placement report for a batch of this size (no FLOPs executed)."""
+        return RoutePlan.trace(
+            lambda x: paper_models.mlp_apply(self.params, x, config=self.runtime),
+            jax.ShapeDtypeStruct((batch, 6), jnp.float32), config=self.runtime)
 
     def warmup(self, batch: int = 1):
         x = jnp.zeros((batch, 6), jnp.float32)
@@ -78,22 +91,33 @@ class PacketPath:
 class FlowPath:
     """Use-cases 2/3: flow-granularity classification over ready flows."""
 
-    def __init__(self, params: Any, model: str = "cnn", *, policy: str = "collaborative",
-                 fused_aggregation: bool = True):
+    def __init__(self, params: Any, model: str = "cnn", *,
+                 config: Optional[RuntimeConfig] = None,
+                 policy: Optional[str] = None, fused_aggregation: Optional[bool] = None):
         self.params = params
         self.model = model
+        self.runtime = resolve_config(config, policy=policy,
+                                      fused_aggregation=fused_aggregation)
         self.rules = decisions.RuleTable()
         if model == "cnn":
-            fn = lambda p, x: paper_models.cnn_apply(
-                p, x, policy=policy, fused_aggregation=fused_aggregation)
+            self._fn = lambda p, x: paper_models.cnn_apply(p, x, config=self.runtime)
         else:
-            fn = lambda p, x: paper_models.transformer_apply(p, x, policy=policy)
-        self._infer = jax.jit(fn)
+            self._fn = lambda p, x: paper_models.transformer_apply(p, x, config=self.runtime)
+        self._infer = jax.jit(self._fn)
         self.stats = PathStats()
 
+    def _abstract_input(self, flows: int) -> jax.ShapeDtypeStruct:
+        shape = ((flows, paper_models.CNN_SEQ) if self.model == "cnn"
+                 else (flows, paper_models.TF_PKTS, paper_models.TF_BYTES))
+        return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+    def route_plan(self, flows: int) -> RoutePlan:
+        """Placement report for this many flows (no FLOPs executed)."""
+        return RoutePlan.trace(lambda x: self._fn(self.params, x),
+                               self._abstract_input(flows), config=self.runtime)
+
     def warmup(self, flows: int):
-        x = (jnp.zeros((flows, paper_models.CNN_SEQ), jnp.float32) if self.model == "cnn"
-             else jnp.zeros((flows, paper_models.TF_PKTS, paper_models.TF_BYTES), jnp.float32))
+        x = jnp.zeros(self._abstract_input(flows).shape, jnp.float32)
         jax.block_until_ready(self._infer(self.params, x))
 
     def process(self, flow_inputs: jax.Array, flow_ids: np.ndarray) -> np.ndarray:

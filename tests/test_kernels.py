@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.kernels.arype_matmul import arype_matmul, arype_matmul_unfused, ref_matmul
 from repro.kernels.flash_attention import flash_attention, ref_attention

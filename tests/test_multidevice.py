@@ -80,8 +80,8 @@ def test_pipeline_parallel_matches_sequential():
     from repro.distributed.pipeline import pipeline_forward, split_stages
     from repro.launch.mesh import make_host_mesh
 
-    mesh = jax.make_mesh((4,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import _axis_type_kwargs
+    mesh = jax.make_mesh((4,), ("pod",), **_axis_type_kwargs(1))
     L, D = 8, 16
     key = jax.random.PRNGKey(0)
     ws = jax.random.normal(key, (L, D, D)) * 0.3
@@ -161,7 +161,8 @@ def test_dryrun_machinery_small_mesh():
             compiled = jax.jit(cell.fn, in_shardings=cell.in_shardings,
                                donate_argnums=cell.donate_argnums
                                ).lower(*cell.args).compile()
-    ca = compiled.cost_analysis()
+    from repro.launch.roofline import cost_dict
+    ca = cost_dict(compiled)
     ma = compiled.memory_analysis()
     coll = parse_collectives(compiled.as_text(), 8)
     assert ca["flops"] > 0
@@ -179,8 +180,8 @@ def test_compressed_psum_shard_map():
     from jax.sharding import PartitionSpec as P
     from repro.distributed.compression import compressed_psum_with_feedback
 
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import _axis_type_kwargs
+    mesh = jax.make_mesh((8,), ("data",), **_axis_type_kwargs(1))
     g = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
     e = jnp.zeros((8, 64))
 

@@ -1,12 +1,14 @@
 """Octopus router: utilization model (incl. the paper's 9.3% example), path
-equivalence, and the policy's routing decisions."""
+equivalence, and the policy's routing decisions — all through the unified
+runtime API (deprecated kwargs are covered in test_runtime.py)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import router
+from repro.runtime import RuntimeConfig, octopus_runtime
 
 
 def test_paper_utilization_example():
@@ -25,9 +27,16 @@ def test_routing_decisions():
     assert router.route_matmul(10, 3, 32).path == "vpe"
     assert router.route_matmul(4096, 4096, 4096).path == "arype"
     assert router.route_matmul(20000, 3, 32).path == "vpe"  # CNN layer 1, f=1000
-    assert router.route_matmul(10000, 96, 32, policy="arype_only").path == "arype"
+    forced = RuntimeConfig(policy="arype_only")
+    assert router.route_matmul(10000, 96, 32, config=forced).path == "arype"
     # big working set never goes to VPE even at low util
     assert router.route_matmul(10**6, 64, 64).path == "arype"
+
+
+def test_routing_follows_ambient_runtime():
+    with octopus_runtime(RuntimeConfig(policy="vpe_only")):
+        assert router.route_matmul(4096, 4096, 4096).path == "vpe"
+    assert router.route_matmul(4096, 4096, 4096).path == "arype"
 
 
 @pytest.mark.parametrize("policy", ["collaborative", "arype_only", "vpe_only"])
@@ -37,7 +46,7 @@ def test_matmul_path_equivalence(policy, shape):
     xs, ws = shape
     x = jax.random.normal(jax.random.PRNGKey(0), xs, jnp.float32)
     w = jax.random.normal(jax.random.PRNGKey(1), ws, jnp.float32)
-    out = router.matmul(x, w, policy=policy)
+    out = router.matmul(x, w, config=RuntimeConfig(policy=policy))
     ref = jnp.einsum("...k,kn->...n", x, w)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
 
@@ -48,7 +57,7 @@ def test_matmul_path_equivalence(policy, shape):
 def test_matmul_property(m, k, n, act):
     x = jax.random.normal(jax.random.PRNGKey(m * 7 + k), (m, k), jnp.float32)
     w = jax.random.normal(jax.random.PRNGKey(n), (k, n), jnp.float32)
-    out = router.matmul(x, w, policy="collaborative", activation=act)
+    out = router.matmul(x, w, activation=act)
     ref = jnp.dot(x, w)
     if act == "relu":
         ref = jnp.maximum(ref, 0)
@@ -64,6 +73,7 @@ def test_pallas_paths_match_jnp():
     w_small = jax.random.normal(jax.random.PRNGKey(1), (48, 8), jnp.float32)
     w_big = jax.random.normal(jax.random.PRNGKey(2), (48, 256), jnp.float32)
     for w in (w_small, w_big):
-        a = router.matmul(x, w, use_pallas=True)
-        b = router.matmul(x, w, use_pallas=False)
+        with octopus_runtime(RuntimeConfig(use_pallas=True, interpret=True)):
+            a = router.matmul(x, w)
+        b = router.matmul(x, w)
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)

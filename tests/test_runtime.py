@@ -1,0 +1,271 @@
+"""The unified Octopus runtime: RuntimeConfig context semantics (nesting,
+override precedence, validation), RoutePlan as the single placement truth
+(trace == from_layers == cycle model), and deprecated-kwarg back-compat."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import router
+from repro.core.collaborative import (
+    OctopusCycleModel,
+    collaborative_forward,
+    usecase2_layers,
+    usecase2_plan,
+    usecase3_layers,
+    usecase3_plan,
+)
+from repro.models import paper_models
+from repro.runtime import (
+    DEFAULT_RUNTIME,
+    RoutePlan,
+    RuntimeConfig,
+    current_runtime,
+    octopus_runtime,
+    runtime_overrides,
+)
+from repro.serving.packet_path import FlowPath, PacketPath
+
+
+# ---------------------------------------------------------------------------
+# RuntimeConfig + context semantics
+# ---------------------------------------------------------------------------
+
+def test_default_runtime_matches_legacy_globals():
+    cfg = current_runtime()
+    assert cfg == DEFAULT_RUNTIME
+    assert (cfg.policy, cfg.tau, cfg.mxu_tile, cfg.fill_depth, cfg.vpe_max_elems) == (
+        "collaborative", 0.35, 128, 8, 1 << 21)
+    # legacy module aliases still resolve and agree
+    assert (router.TAU, router.MXU, router.FILL_DEPTH, router.VPE_MAX_ELEMS) == (
+        0.35, 128, 8, 1 << 21)
+
+
+def test_context_nesting_and_restore():
+    assert current_runtime().policy == "collaborative"
+    with octopus_runtime(RuntimeConfig(policy="arype_only")) as outer:
+        assert current_runtime() is outer
+        with runtime_overrides(tau=0.9) as inner:
+            # overrides compose on the innermost config
+            assert inner.policy == "arype_only" and inner.tau == 0.9
+            assert current_runtime() is inner
+        assert current_runtime() is outer
+    assert current_runtime() == DEFAULT_RUNTIME
+
+
+def test_context_restores_on_exception():
+    with pytest.raises(RuntimeError):
+        with octopus_runtime(RuntimeConfig(policy="vpe_only")):
+            raise RuntimeError("boom")
+    assert current_runtime() == DEFAULT_RUNTIME
+
+
+def test_explicit_config_beats_ambient():
+    with octopus_runtime(RuntimeConfig(policy="vpe_only")):
+        r = router.route_matmul(4096, 4096, 4096,
+                                config=RuntimeConfig(policy="arype_only"))
+    assert r.path == "arype"
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        RuntimeConfig(policy="bogus")
+    with pytest.raises(ValueError):
+        RuntimeConfig(tau=0.0)
+    with pytest.raises(ValueError):
+        RuntimeConfig(mxu_tile=0)
+
+
+def test_tau_and_vpe_cap_are_live_knobs():
+    # (128,64)x(64,96): util = 0.5*0.75 = 0.375 — arype at tau=0.35, vpe at 0.5
+    assert router.route_matmul(128, 64, 96).path == "arype"
+    with runtime_overrides(tau=0.5):
+        assert router.route_matmul(128, 64, 96).path == "vpe"
+    with runtime_overrides(vpe_max_elems=10):
+        assert router.route_matmul(10, 3, 32).path == "arype"  # cap excludes it
+
+
+# ---------------------------------------------------------------------------
+# Deprecated kwarg back-compat (one release)
+# ---------------------------------------------------------------------------
+
+def test_deprecated_policy_kwarg_warns_and_overrides():
+    with pytest.warns(DeprecationWarning):
+        r = router.route_matmul(4096, 4096, 4096, policy="vpe_only")
+    assert r.path == "vpe"
+
+
+def test_deprecated_matmul_kwargs_match_config_path():
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 24), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (24, 8), jnp.float32)
+    with pytest.warns(DeprecationWarning):
+        a = router.matmul(x, w, policy="arype_only", use_pallas=False)
+    b = router.matmul(x, w, config=RuntimeConfig(policy="arype_only"))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_deprecated_kwargs_beat_explicit_config():
+    with pytest.warns(DeprecationWarning):
+        r = router.route_matmul(4096, 4096, 4096,
+                                config=RuntimeConfig(policy="arype_only"),
+                                policy="vpe_only")
+    assert r.path == "vpe"
+
+
+def test_new_api_does_not_warn():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        router.matmul(jnp.ones((4, 4)), jnp.ones((4, 4)),
+                      config=RuntimeConfig(policy="arype_only"))
+        router.route_matmul(32, 32, 32)
+
+
+def test_deprecated_model_kwargs_still_work():
+    params = paper_models.init_paper_model("mlp", jax.random.PRNGKey(0))
+    x = jnp.ones((4, 6), jnp.float32)
+    with pytest.warns(DeprecationWarning):
+        a = paper_models.mlp_apply(params, x, policy="arype_only")
+    b = paper_models.mlp_apply(params, x, config=RuntimeConfig(policy="arype_only"))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# RoutePlan: one placement truth for execution, cycle model and explain()
+# ---------------------------------------------------------------------------
+
+def test_routeplan_from_layers_matches_router():
+    plan = usecase2_plan(1000)
+    assert plan.layers() == usecase2_layers(1000)
+    for step in plan:
+        assert step.engine == router.route_matmul(step.m, step.k, step.n).path
+    # paper's placement: conv1 (20000,3,32) is the VPE offload
+    assert plan.engines()["conv1"] == "vpe"
+    assert plan.engines()["conv2"] == "arype"
+
+
+def test_routeplan_trace_cnn_matches_from_layers():
+    """Tracing the *executable* CNN yields the exact paper stack — the plan
+    seen by the cycle model and the plan executed by JAX cannot diverge."""
+    f = 1000
+    params = paper_models.init_paper_model("cnn", jax.random.PRNGKey(0))
+    traced = RoutePlan.trace(lambda x: paper_models.cnn_apply(params, x),
+                             jax.ShapeDtypeStruct((f, paper_models.CNN_SEQ),
+                                                  jnp.float32))
+    assert traced.layers() == usecase2_layers(f)
+    assert traced.engines() == usecase2_plan(f).engines()
+
+
+def test_routeplan_trace_transformer_matches_paper_shapes():
+    f = 50
+    params = paper_models.init_paper_model("transformer", jax.random.PRNGKey(0))
+    traced = RoutePlan.trace(
+        lambda x: paper_models.transformer_apply(params, x),
+        jax.ShapeDtypeStruct((f, paper_models.TF_PKTS, paper_models.TF_BYTES),
+                             jnp.float32))
+    by_name = {s.name: s.shape for s in traced}
+    paper = {name: (m, k, n) for name, m, k, n in usecase3_layers(f)}
+    # the routed matmuls (qk/av run as einsum attention, cls is extra-paper)
+    for name in ("wq", "wk", "wv", "mlp1", "mlp2"):
+        assert by_name[name] == paper[name]
+    ref = usecase3_plan(f).engines()
+    for name in ("wq", "wk", "wv", "mlp1", "mlp2"):
+        assert traced.engines()[name] == ref[name]
+
+
+def test_cycle_model_consumes_plan_placement():
+    plan = usecase2_plan(1000)
+    rep = OctopusCycleModel().stack_report(plan, collaborative=True)
+    assert rep["placements"] == plan.engines()
+    off = OctopusCycleModel().stack_report(plan, collaborative=False)
+    assert set(off["placements"].values()) == {"arype"}
+    # a bare layer list still works (routed into a plan internally)
+    rep2 = OctopusCycleModel().stack_report(usecase2_layers(1000), collaborative=True)
+    assert rep2["placements"] == rep["placements"]
+    assert rep2["total_cycles"] == rep["total_cycles"]
+
+
+def test_cycle_model_bare_layers_ignore_forced_ambient_policy():
+    """The legacy bare-list form always routed with the router-decides policy;
+    a forced ambient policy must not silently defeat collaborative=True."""
+    with octopus_runtime(RuntimeConfig(policy="arype_only")):
+        rep = OctopusCycleModel().stack_report(usecase2_layers(1000),
+                                               collaborative=True)
+    assert "vpe" in set(rep["placements"].values())
+
+
+def test_collaborative_forward_rejects_mismatched_plan():
+    ws = [jnp.ones((8, 8)), jnp.ones((8, 8))]
+    from repro.core.collaborative import plan_stack
+
+    short = plan_stack(jnp.ones((4, 8)), ws[:1])
+    with pytest.raises(ValueError, match="rebuild the plan"):
+        collaborative_forward(jnp.ones((4, 8)), ws, [None, None], plan=short)
+
+
+def test_collaborative_forward_inherits_plan_config(monkeypatch):
+    """A supplied plan's config governs execution: a plan built for the
+    unfused ablation must take the unfused path without config= repeated."""
+    import repro.core.collaborative as collab
+    from repro.core.collaborative import plan_stack
+
+    calls = []
+    orig = collab._unfused_jnp
+    monkeypatch.setattr(collab, "_unfused_jnp",
+                        lambda *a, **k: (calls.append(1), orig(*a, **k))[1])
+    ws = [jax.random.normal(jax.random.PRNGKey(0), (300, 64))]
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, 300))
+    plan = plan_stack(x, ws, config=RuntimeConfig(policy="arype_only",
+                                                  fused_aggregation=False))
+    out = collab.collaborative_forward(x, ws, [None], plan=plan)
+    assert calls, "plan's fused_aggregation=False was ignored"
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x @ ws[0]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_cycle_model_respects_plan_config():
+    forced = usecase2_plan(1000, config=RuntimeConfig(policy="arype_only"))
+    rep = OctopusCycleModel().stack_report(forced, collaborative=True)
+    assert set(rep["placements"].values()) == {"arype"}
+
+
+def test_collaborative_forward_accepts_plan():
+    ws = [jax.random.normal(jax.random.PRNGKey(i), s) for i, s in
+          enumerate([(300, 64), (64, 96), (96, 8)])]
+    x = jax.random.normal(jax.random.PRNGKey(9), (32, 300))
+    from repro.core.collaborative import plan_stack
+
+    plan = plan_stack(x, ws)
+    out = collaborative_forward(x, ws, ["relu", "relu", None], plan=plan)
+    ref = collaborative_forward(x, ws, ["relu", "relu", None])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref))
+
+
+def test_plan_explain_is_readable():
+    text = usecase2_plan(1000).explain()
+    assert "policy=collaborative" in text
+    assert "conv1" in text and "(20000,3,32)" in text
+    assert "vpe" in text and "arype" in text
+    lines = text.splitlines()
+    assert len(lines) == 2 + len(usecase2_layers(1000))  # header + rows + summary
+
+
+def test_serving_paths_expose_plans():
+    mlp = paper_models.init_paper_model("mlp", jax.random.PRNGKey(0))
+    pplan = PacketPath(mlp).route_plan(batch=8)
+    assert [s.shape for s in pplan] == [(8, 6, 12), (8, 12, 6), (8, 6, 3), (8, 3, 2)]
+    assert all(s.engine == "vpe" for s in pplan)  # the paper's latency path
+    cnn = paper_models.init_paper_model("cnn", jax.random.PRNGKey(1))
+    fplan = FlowPath(cnn, model="cnn").route_plan(flows=1000)
+    assert fplan.layers() == usecase2_layers(1000)
+
+
+def test_jit_traces_under_construction_config():
+    """Serving paths capture their config at construction: the jitted callable
+    keeps its placement even if the ambient runtime changes afterwards."""
+    params = paper_models.init_paper_model("mlp", jax.random.PRNGKey(0))
+    path = PacketPath(params, config=RuntimeConfig(policy="arype_only"))
+    with octopus_runtime(RuntimeConfig(policy="vpe_only")):
+        assert path.route_plan(8).engines() == {
+            "w0": "arype", "w1": "arype", "w2": "arype", "w3": "arype"}

@@ -11,9 +11,10 @@ from repro.core import decisions
 from repro.core.collaborative import (
     OctopusCycleModel,
     collaborative_forward,
-    usecase2_layers,
-    usecase3_layers,
+    usecase2_plan,
+    usecase3_plan,
 )
+from repro.runtime import RuntimeConfig
 from repro.core.feature_extractor import ExtractorConfig, FeatureExtractor
 from repro.data.packets import PacketTraceConfig, synth_packet_trace
 from repro.models import paper_models
@@ -91,8 +92,10 @@ def test_collaborative_fused_equals_unfused():
     ws = [jax.random.normal(jax.random.PRNGKey(i), s) for i, s in
           enumerate([(300, 64), (64, 96), (96, 8)])]
     x = jax.random.normal(jax.random.PRNGKey(9), (32, 300))
-    a = collaborative_forward(x, ws, ["relu", "relu", None], fused_aggregation=True)
-    b = collaborative_forward(x, ws, ["relu", "relu", None], fused_aggregation=False)
+    a = collaborative_forward(x, ws, ["relu", "relu", None],
+                              config=RuntimeConfig(fused_aggregation=True))
+    b = collaborative_forward(x, ws, ["relu", "relu", None],
+                              config=RuntimeConfig(fused_aggregation=False))
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
 
 
@@ -102,8 +105,9 @@ def test_cycle_model_reproduces_paper_table6_shape():
     on the ablation side and reproduces the direction and magnitude of the
     collaborative win."""
     m = OctopusCycleModel()
-    off = m.stack_report(usecase2_layers(1000), collaborative=False)
-    on = m.stack_report(usecase2_layers(1000), collaborative=True)
+    plan = usecase2_plan(1000)
+    off = m.stack_report(plan, collaborative=False)
+    on = m.stack_report(plan, collaborative=True)
     assert abs(off["arype_eff"] - 0.482) < 0.06  # paper: 48.2%
     assert on["arype_eff"] > off["arype_eff"] + 0.25
     speedup = off["time_s"] / on["time_s"]
@@ -112,7 +116,7 @@ def test_cycle_model_reproduces_paper_table6_shape():
 
 def test_cycle_model_usecase3_efficiency():
     m = OctopusCycleModel()
-    rep = m.stack_report(usecase3_layers(1000), collaborative=True)
+    rep = m.stack_report(usecase3_plan(1000), collaborative=True)
     # paper: 96.3% AryPE efficiency for the transformer use-case
     assert rep["arype_eff"] > 0.70
 
