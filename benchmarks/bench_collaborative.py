@@ -14,7 +14,6 @@ Three views:
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import row, time_fn
 from repro.core.collaborative import OctopusCycleModel, usecase2_plan

@@ -38,7 +38,6 @@ def run() -> list[str]:
 
     from repro.kernels.flow_features.ops import default_program, flow_feature_update
     from repro.core.flow_tracker import hash_slot, build_meta
-    import numpy as np
 
     slots = hash_slot(packets.tuple_hash, 8192)
     meta = jax.vmap(lambda i: build_meta(

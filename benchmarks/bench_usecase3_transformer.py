@@ -3,7 +3,6 @@ AryPE efficiency with collaborative block-aggregation offload)."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import row, time_fn
 from repro.core.collaborative import OctopusCycleModel, usecase3_plan

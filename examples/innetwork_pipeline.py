@@ -69,7 +69,7 @@ def main():
     fpath = FlowPath(cnn_params, model="cnn")
     print(fpath.route_plan(int(ready.sum())).explain())  # shared placement truth
     fpath.warmup(int(ready.sum()))
-    cls = fpath.process(x_cnn, np.flatnonzero(ready))
+    fpath.process(x_cnn, np.flatnonzero(ready))
     kflow = fpath.stats.throughput / 1e3
     print(f"[usecase2] {int(ready.sum())} flows classified "
           f"({kflow:.1f} kflow/s; paper w/ collaborating: 90 kflow/s)")
@@ -96,7 +96,7 @@ def main():
     tf_params = paper_models.init_paper_model("transformer", jax.random.PRNGKey(2))
     tpath = FlowPath(tf_params, model="transformer")
     tpath.warmup(int(ready_k.sum()))
-    tcls = tpath.process(x_tf, np.flatnonzero(ready_k))
+    tpath.process(x_tf, np.flatnonzero(ready_k))
     print(f"[usecase3] {int(ready_k.sum())} flows "
           f"({tpath.stats.throughput/1e3:.1f} kflow/s; paper: 35.7 kflow/s)")
 

@@ -13,8 +13,7 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.configs import get_config, reduced_config
-from repro.configs.base import LayerSpec
+from repro.configs import get_config
 from repro.data.tokens import TokenPipelineConfig
 from repro.train.loop import Trainer, TrainLoopConfig
 

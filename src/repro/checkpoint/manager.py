@@ -23,8 +23,7 @@ import os
 import re
 import shutil
 import threading
-import time
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

@@ -23,10 +23,10 @@ logits head.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Callable, Optional
+from dataclasses import dataclass
+from typing import Callable
 
-from repro.common.util import ceil_div, round_up
+from repro.common.util import round_up
 
 # ---------------------------------------------------------------------------
 # Layer / block specification

@@ -66,20 +66,13 @@ def collaborative_forward(
     *,
     config: Optional[RuntimeConfig] = None,
     plan: Optional[RoutePlan] = None,
-    policy: Optional[str] = None,
-    use_pallas: Optional[bool] = None,
-    fused_aggregation: Optional[bool] = None,
-    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Run x through a stack of routed matmuls, executing ``plan`` (built here
     when not supplied).  A supplied plan's own config governs execution unless
-    ``config=`` overrides it.  ``policy=`` / ``use_pallas=`` /
-    ``fused_aggregation=`` / ``interpret=`` are deprecated overrides; use a
-    RuntimeConfig."""
+    ``config=`` overrides it."""
     if config is None and plan is not None:
         config = plan.config
-    cfg = resolve_config(config, policy=policy, use_pallas=use_pallas,
-                         fused_aggregation=fused_aggregation, interpret=interpret)
+    cfg = resolve_config(config)
     if plan is None:
         plan = plan_stack(x, weights, config=cfg)
     else:
@@ -220,7 +213,9 @@ class OctopusCycleModel:
         applies only to that bare-list form: a :class:`RoutePlan` already
         carries the config its routes were decided under.  Placement:
         the plan's recorded routes when collaborative; everything on AryPE
-        when not (the 'straightforwardly inserted accelerator')."""
+        when not (the 'straightforwardly inserted accelerator').  The report's
+        ``calibration`` key records the measured-crossover fingerprint the
+        plan's thresholds came from (None: analytic defaults)."""
         if not isinstance(plan, RoutePlan):
             from repro.runtime import current_runtime
 
@@ -245,6 +240,7 @@ class OctopusCycleModel:
         vpe_macs = sum(c.useful_macs for _, c in vpe)
         return {
             "collaborative": collaborative,
+            "calibration": plan.config.calibration,
             "placements": placements,
             "arype_eff": ary_macs / (ary_cycles * ary_peak) if ary_cycles else 0.0,
             "vpe_eff": vpe_macs / (vpe_cycles * vpe_peak) if vpe_cycles else 0.0,

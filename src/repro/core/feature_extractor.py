@@ -19,15 +19,14 @@ etc.  ``derive_whole_features`` materializes the standard derived vector.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import flow_tracker as ft
-from repro.kernels.flow_features.ops import HIST, META, default_program, flow_feature_update
+from repro.kernels.flow_features.ops import HIST, default_program
 
 INT_MAX = jnp.iinfo(jnp.int32).max
 

@@ -15,7 +15,6 @@ occupied slot evicts the stale flow (outdated-flow recycling).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import NamedTuple
 
 import jax

@@ -13,12 +13,12 @@ utilization model, and dispatches to one of the two engine paths:
     CNN's first layer to the SIMDU sub-lanes.
 
 All tuning lives in :class:`repro.runtime.RuntimeConfig` — ambient via
-``with octopus_runtime(cfg):`` or passed explicitly as ``config=``.  The old
-``policy=`` / ``use_pallas=`` / ``interpret=`` / ``accum_dtype=`` kwargs are
-still accepted for one release as deprecated per-call overrides (they emit
-``DeprecationWarning``).  The utilization model itself lives in
-:mod:`repro.runtime.routing`; this module re-exports it so existing imports
-(``router.route_matmul``, ``router.mxu_utilization``, ...) keep working.
+``with octopus_runtime(cfg):`` or passed explicitly as ``config=``.  (The
+old per-call ``policy=`` / ``use_pallas=`` / ``interpret=`` /
+``accum_dtype=`` kwargs were removed on the PR 1 deprecation schedule.)
+The utilization model itself lives in :mod:`repro.runtime.routing`; this
+module re-exports it so existing imports (``router.route_matmul``,
+``router.mxu_utilization``, ...) keep working.
 """
 from __future__ import annotations
 
@@ -54,11 +54,10 @@ VPE_MAX_ELEMS = RuntimeConfig.vpe_max_elems
 
 
 def route_matmul(m: int, k: int, n: int, *, config: Optional[RuntimeConfig] = None,
-                 name: Optional[str] = None, policy: Optional[str] = None) -> Route:
-    """Placement decision for an (m,k)x(k,n) matmul.  ``policy=`` is a
-    deprecated override; prefer ``config=`` / the ambient runtime."""
-    cfg = resolve_config(config, policy=policy)
-    return _routing.route_matmul(m, k, n, config=cfg, name=name)
+                 name: Optional[str] = None) -> Route:
+    """Placement decision for an (m,k)x(k,n) matmul under ``config`` (the
+    ambient runtime when None)."""
+    return _routing.route_matmul(m, k, n, config=resolve_config(config), name=name)
 
 
 def _vpe_mm(x: jax.Array, w: jax.Array, accum_dtype=jnp.float32) -> jax.Array:
@@ -82,26 +81,20 @@ def matmul(
     config: Optional[RuntimeConfig] = None,
     route: Optional[Route] = None,
     name: Optional[str] = None,
-    policy: Optional[str] = None,
-    use_pallas: Optional[bool] = None,
-    interpret: Optional[bool] = None,
-    accum_dtype=None,
 ) -> jax.Array:
     """Routed matmul: x (..., M, K) @ w (K, N) -> (..., M, N).
 
     Placement and execution are governed by ``config`` (default: the ambient
     :func:`repro.runtime.current_runtime`).  Pass ``route=`` to execute a
     pre-decided :class:`Route` (e.g. a :class:`RoutePlan` step) instead of
-    re-deriving it.  ``policy`` / ``use_pallas`` / ``interpret`` /
-    ``accum_dtype`` are deprecated per-call overrides.
+    re-deriving it.
 
     With ``config.use_pallas`` the call lowers through the Pallas engine
     kernels (TPU target; validated with ``interpret=True`` on CPU).
     Otherwise the two paths are expressed in jnp so XLA emits MXU dots vs
     VPU mul+reduce respectively.
     """
-    cfg = resolve_config(config, policy=policy, use_pallas=use_pallas,
-                         interpret=interpret, accum_dtype=accum_dtype)
+    cfg = resolve_config(config)
     *batch, m, k = x.shape
     k2, n = w.shape
     assert k == k2, (x.shape, w.shape)

@@ -18,7 +18,6 @@ replication waste — e.g. gemma3's 4 q-heads on a 16-way model axis).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Optional
 
 import jax

@@ -1,0 +1,104 @@
+"""Measure the arype/vpe crossover on this backend and persist it.
+
+    PYTHONPATH=src python -m repro.launch.calibrate                 # cache path
+    PYTHONPATH=src python -m repro.launch.calibrate --out calib.json
+    PYTHONPATH=src python -m repro.launch.calibrate --smoke         # CI subset
+
+Sweeps the (m, k, n) timing grid (``repro.runtime.autotune``), fits the
+measured crossover into calibrated ``tau`` / ``vpe_max_elems``, writes the
+backend-keyed artifact, then reports — per paper use-case model — every layer
+whose placement under the calibrated thresholds diverges from the analytic
+defaults (the full placements come from ``RoutePlan.explain``).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.core.collaborative import usecase2_layers, usecase3_layers
+from repro.runtime import (
+    DEFAULT_RUNTIME,
+    RoutePlan,
+    RuntimeConfig,
+    autotune,
+    platform,
+)
+
+# Paper-model matmul stacks the report diffs (MLP per-packet batch 8; the
+# flow use-cases at 1000 tracked flows, the paper's Table 6 operating point).
+_MLP_LAYERS = [("w0", 8, 6, 12), ("w1", 8, 12, 6), ("w2", 8, 6, 3), ("w3", 8, 3, 2)]
+
+
+def _model_stacks(flows: int) -> list[tuple[str, list[tuple[str, int, int, int]]]]:
+    return [
+        ("usecase1_mlp(batch=8)", _MLP_LAYERS),
+        (f"usecase2_cnn(flows={flows})", usecase2_layers(flows)),
+        (f"usecase3_transformer(flows={flows})", usecase3_layers(flows)),
+    ]
+
+
+def divergence_report(calibrated: RuntimeConfig, *, flows: int = 1000,
+                      analytic: RuntimeConfig = DEFAULT_RUNTIME,
+                      verbose: bool = False) -> str:
+    """Per paper-model layer, where calibrated placement diverges from the
+    analytic default (and the full calibrated plan when ``verbose``)."""
+    lines = []
+    for label, layers in _model_stacks(flows):
+        a_plan = RoutePlan.from_layers(layers, config=analytic)
+        c_plan = RoutePlan.from_layers(layers, config=calibrated)
+        moved = [(a, c) for a, c in zip(a_plan.steps, c_plan.steps)
+                 if a.engine != c.engine]
+        lines.append(f"{label}:")
+        if not moved:
+            lines.append("  placement unchanged by calibration")
+        for a, c in moved:
+            lines.append(f"  {a.name}  ({a.m},{a.k},{a.n})  "
+                         f"{a.engine} -> {c.engine}  (util={c.route.util:.3f})")
+        if verbose:
+            lines.extend("  " + ln for ln in c_plan.explain().splitlines())
+    return "\n".join(lines)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="calibrate tau/vpe_max_elems from measured crossover points")
+    ap.add_argument("--out", default=None,
+                    help="artifact path (default: the backend-keyed cache path, "
+                         f"{autotune.cache_path()})")
+    ap.add_argument("--smoke", action="store_true",
+                    help="8-point grid, 2 timing iters (CI / smoke tests)")
+    ap.add_argument("--iters", type=int, default=None,
+                    help="timing iterations per shape per path (default 5; 2 with --smoke)")
+    ap.add_argument("--flows", type=int, default=1000,
+                    help="tracked flows for the paper-model divergence report")
+    ap.add_argument("--verbose", action="store_true",
+                    help="print the full calibrated RoutePlan per model")
+    args = ap.parse_args(argv)
+
+    fp = platform.fingerprint()
+    print(f"[calibrate] platform: {platform.fingerprint_id(fp)} "
+          f"(pallas={'yes' if platform.pallas_available() else 'no'}, "
+          f"interpret_default={platform.interpret_default()})")
+    iters = args.iters if args.iters is not None else (2 if args.smoke else 5)
+    grid = autotune.default_grid(smoke=args.smoke)
+    print(f"[calibrate] sweeping {len(grid)} (m,k,n) shapes x 2 engine paths "
+          f"({iters} iters each)...")
+    calib = autotune.calibrate(grid, iters=iters)
+    path = autotune.save_calibration(calib, args.out)
+
+    n_vpe = sum(1 for t in calib.timings if t.vpe_wins)
+    print(f"[calibrate] vpe won {n_vpe}/{len(calib.timings)} shapes")
+    print(f"[calibrate] analytic: tau={DEFAULT_RUNTIME.tau} "
+          f"vpe_max_elems={DEFAULT_RUNTIME.vpe_max_elems}")
+    print(f"[calibrate] measured: tau={calib.tau:.4f} "
+          f"vpe_max_elems={calib.vpe_max_elems}")
+    print(f"[calibrate] artifact: {path}")
+    print()
+    print("placement divergence (analytic -> calibrated):")
+    print(divergence_report(calib.apply(RuntimeConfig()), flows=args.flows,
+                            verbose=args.verbose))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,10 +16,8 @@ cost_analysis, so cells lowered through kernels add their analytic flops.
 """
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import asdict, dataclass, field
-from typing import Optional
 
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 

@@ -36,7 +36,7 @@ def main():
             f"--xla_force_host_platform_device_count={args.devices}"
         )
 
-    import jax
+    import jax  # noqa: F401  (initialize after XLA_FLAGS is set)
 
     from repro.configs import get_config, reduced_config
     from repro.data.tokens import TokenPipelineConfig

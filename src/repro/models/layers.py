@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.common.util import ceil_div, round_up
+from repro.common.util import ceil_div
 from repro.configs.base import ArchConfig
 from repro.core import router
 from repro.distributed.act import shard_act

@@ -15,21 +15,20 @@ img2col so the placement matches the paper's matrix-multiplication mapping
 exactly ((20f,3)x(3,32), (10f,96)x(96,32), ...).
 
 Tuning comes from the ambient :mod:`repro.runtime` config (or an explicit
-``config=``); the old ``policy=`` / ``use_pallas=`` / ``fused_aggregation=``
-kwargs survive one release as deprecated overrides.
+``config=``).  The old per-call ``policy=`` / ``use_pallas=`` /
+``fused_aggregation=`` kwargs were removed on the PR 1 deprecation schedule.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.util import ceil_div, fold_in_str
+from repro.common.util import ceil_div
 from repro.core import router
-from repro.models.spec import ParamSpec, init_params, logical_axes
+from repro.models.spec import ParamSpec, init_params
 from repro.runtime import RuntimeConfig, octopus_runtime, resolve_config
 
 
@@ -48,10 +47,9 @@ def mlp_specs() -> dict:
     return specs
 
 
-def mlp_apply(params: dict, x: jax.Array, *, config: Optional[RuntimeConfig] = None,
-              policy: Optional[str] = None, use_pallas: Optional[bool] = None) -> jax.Array:
-    cfg = resolve_config(config, policy=policy, use_pallas=use_pallas)
-    with octopus_runtime(cfg):
+def mlp_apply(params: dict, x: jax.Array, *,
+              config: Optional[RuntimeConfig] = None) -> jax.Array:
+    with octopus_runtime(resolve_config(config)):
         h = x
         n = len(MLP_DIMS) - 1
         for i in range(n):
@@ -103,14 +101,12 @@ def cnn_specs() -> dict:
     return specs
 
 
-def cnn_apply(params: dict, x: jax.Array, *, config: Optional[RuntimeConfig] = None,
-              policy: Optional[str] = None, use_pallas: Optional[bool] = None,
-              fused_aggregation: Optional[bool] = None) -> jax.Array:
+def cnn_apply(params: dict, x: jax.Array, *,
+              config: Optional[RuntimeConfig] = None) -> jax.Array:
     """x: (F, 20) interval vectors -> logits (F, 162)."""
     from repro.core.collaborative import _unfused_jnp
 
-    cfg = resolve_config(config, policy=policy, use_pallas=use_pallas,
-                         fused_aggregation=fused_aggregation)
+    cfg = resolve_config(config)
     with octopus_runtime(cfg):
         h = x[..., :, None].astype(jnp.float32)  # (F, 20, 1)
         for i in range(len(CNN_CHANNELS) - 1):
@@ -156,12 +152,9 @@ def transformer_specs() -> dict:
 
 
 def transformer_apply(params: dict, payload: jax.Array, *,
-                      config: Optional[RuntimeConfig] = None,
-                      policy: Optional[str] = None,
-                      use_pallas: Optional[bool] = None) -> jax.Array:
+                      config: Optional[RuntimeConfig] = None) -> jax.Array:
     """payload: (F, 15, 16) normalized byte matrix -> logits (F, 162)."""
-    cfg = resolve_config(config, policy=policy, use_pallas=use_pallas)
-    with octopus_runtime(cfg):
+    with octopus_runtime(resolve_config(config)):
         mm = router.matmul
         x = payload.astype(jnp.float32)
         q = mm(x, params["wq"], name="wq")  # (F,15,64)   [(15,16)x(16,64)]

@@ -353,7 +353,6 @@ def _slstm_cell(wx_t, r, st: SLSTMCache):
     """wx_t: (B, H, 4*HD) input contributions; r: (H, HD, 4HD)."""
     rec = jnp.einsum("bhd,hdg->bhg", st.h, r)  # (B,H,4HD)
     pre = wx_t.astype(jnp.float32) + rec
-    hd = st.c.shape[-1]
     i_raw, f_raw, z_raw, o_raw = jnp.split(pre, 4, axis=-1)
     m_new = jnp.maximum(jax.nn.log_sigmoid(f_raw) + st.m, i_raw)
     i_g = jnp.exp(i_raw - m_new)

@@ -9,7 +9,6 @@ uniform and HLO size is ~constant in depth.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Any, Optional
 
@@ -18,7 +17,6 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.common.util import fold_in_str
 from repro.configs.base import ArchConfig, LayerSpec
 from repro.core import router
 from repro.distributed.act import shard_act
@@ -236,7 +234,6 @@ def _logits(params: dict, cfg: ArchConfig, h: jax.Array) -> jax.Array:
                            config=RuntimeConfig.from_arch(cfg), name="lm_head")
     logits = shard_act(logits, "batch", None, "vocab")
     if cfg.padded_vocab != cfg.vocab_size:
-        pad = cfg.padded_vocab - cfg.vocab_size
         logits = jnp.where(
             jnp.arange(cfg.padded_vocab) < cfg.vocab_size, logits,
             jnp.float32(-1e30),

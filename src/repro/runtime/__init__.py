@@ -6,9 +6,24 @@
         y = router.matmul(x, w)                       # ambient config
     plan = RoutePlan.trace(fn, abstract_x)            # shared placement truth
     print(plan.explain())
+
+Self-calibration (measured arype/vpe crossover, see ``repro.runtime.autotune``):
+
+    cfg = RuntimeConfig.calibrated()                  # backend-keyed cache
+    with octopus_runtime(load_calibration(path)):     # or apply an artifact
+        ...
 """
+from repro.runtime import platform
+from repro.runtime.autotune import (
+    Calibration,
+    ShapeTiming,
+    calibrate,
+    fit_crossover,
+    load_calibration,
+    measure_crossover,
+    save_calibration,
+)
 from repro.runtime.config import (
-    DEFAULT_RUNTIME,
     POLICIES,
     RuntimeConfig,
     current_runtime,
@@ -17,6 +32,16 @@ from repro.runtime.config import (
     runtime_overrides,
 )
 from repro.runtime.plan import PlannedMatmul, RoutePlan
+
+
+def __getattr__(name: str):
+    # DEFAULT_RUNTIME is lazy: constructing it probes the JAX backend, which
+    # must not happen as an import side effect (see repro.runtime.config).
+    if name == "DEFAULT_RUNTIME":
+        from repro.runtime import config
+
+        return config.DEFAULT_RUNTIME
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 from repro.runtime.routing import (
     Route,
     RouteRecord,
@@ -27,6 +52,7 @@ from repro.runtime.routing import (
 )
 
 __all__ = [
+    "Calibration",
     "DEFAULT_RUNTIME",
     "POLICIES",
     "PlannedMatmul",
@@ -34,12 +60,19 @@ __all__ = [
     "RouteRecord",
     "RoutePlan",
     "RuntimeConfig",
+    "ShapeTiming",
+    "calibrate",
     "current_runtime",
+    "fit_crossover",
+    "load_calibration",
+    "measure_crossover",
     "mxu_utilization",
     "octopus_runtime",
+    "platform",
     "record_routes",
     "resolve_config",
     "route_matmul",
     "runtime_overrides",
+    "save_calibration",
     "systolic_utilization",
 ]

@@ -1,0 +1,297 @@
+"""Measured arype/vpe crossover calibration (ROADMAP: self-calibrating tau).
+
+The router's placement rule — route to VPE when MXU utilization falls below
+``tau`` and the working set fits ``vpe_max_elems`` — shipped with hand-picked
+constants.  This module measures the actual crossover on the running backend:
+
+  1. :func:`measure_crossover` times both engine paths (AryPE dot vs VPE
+     broadcast-multiply-reduce) over a grid of (m, k, n) shapes.
+  2. :func:`fit_crossover` fits the measurements into the two routing
+     thresholds: ``tau`` is the utilization decision boundary that best
+     separates vpe-faster from arype-faster shapes (a 1-D decision stump over
+     candidate midpoints), ``vpe_max_elems`` caps the VPE path at the largest
+     working set it actually won.
+  3. The result persists as a schema-versioned, backend-keyed JSON artifact
+     (``~/.cache/octopus/calib-<backend>.json`` by default) that
+     :func:`load_calibration` / :meth:`RuntimeConfig.calibrated` re-apply.
+
+A :class:`Calibration` can be handed directly to ``octopus_runtime`` — it
+applies itself onto the ambient config.  The artifact's platform fingerprint
+travels into ``RuntimeConfig.calibration`` so plans, cycle-model reports and
+benchmark JSON all record which measurement produced their thresholds.
+
+``python -m repro.launch.calibrate`` is the CLI front end.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+import warnings
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.runtime import platform
+from repro.runtime.config import RuntimeConfig, current_runtime
+from repro.runtime.routing import mxu_utilization
+
+SCHEMA_VERSION = 1
+
+# Default sweep grid: spans the paper's small-network shapes (conv1-style
+# skinny matmuls that belong on the VPE) through MXU-filling blocks.
+_FULL_M = (8, 64, 512, 4096)
+_FULL_K = (3, 16, 64, 256)
+_FULL_N = (8, 32, 128, 512)
+_SMOKE_M = (8, 512)
+_SMOKE_K = (3, 64)
+_SMOKE_N = (8, 128)
+
+
+def default_grid(smoke: bool = False) -> List[Tuple[int, int, int]]:
+    """The (m, k, n) sweep grid; ``smoke`` is the 8-point CI/test subset."""
+    ms, ks, ns = (_SMOKE_M, _SMOKE_K, _SMOKE_N) if smoke else (_FULL_M, _FULL_K, _FULL_N)
+    return [(m, k, n) for m in ms for k in ks for n in ns]
+
+
+@dataclass(frozen=True)
+class ShapeTiming:
+    """One measured grid point: both engine paths timed for an (m,k,n) matmul."""
+
+    m: int
+    k: int
+    n: int
+    util: float
+    us_arype: float
+    us_vpe: float
+
+    @property
+    def elems(self) -> int:
+        return self.m * self.k * self.n
+
+    @property
+    def vpe_wins(self) -> bool:
+        return self.us_vpe < self.us_arype
+
+
+@dataclass(frozen=True)
+class Calibration:
+    """A fitted, persistable crossover measurement for one backend."""
+
+    tau: float
+    vpe_max_elems: int
+    fingerprint: Dict[str, str]
+    timings: Tuple[ShapeTiming, ...] = ()
+    schema_version: int = SCHEMA_VERSION
+    created_unix: float = field(default_factory=time.time)
+
+    @property
+    def backend(self) -> str:
+        return self.fingerprint.get("backend", "unknown")
+
+    @property
+    def fingerprint_id(self) -> str:
+        return platform.fingerprint_id(self.fingerprint)
+
+    def apply(self, base: Optional[RuntimeConfig] = None) -> RuntimeConfig:
+        """``base`` (ambient runtime when None) with the measured thresholds
+        and this calibration's fingerprint stamped on."""
+        cfg = base if base is not None else current_runtime()
+        return cfg.replace(tau=self.tau, vpe_max_elems=self.vpe_max_elems,
+                           calibration=self.fingerprint_id)
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Calibration":
+        timings = tuple(ShapeTiming(**t) for t in d.get("timings", ()))
+        return cls(tau=float(d["tau"]), vpe_max_elems=int(d["vpe_max_elems"]),
+                   fingerprint=dict(d["fingerprint"]), timings=timings,
+                   schema_version=int(d["schema_version"]),
+                   created_unix=float(d.get("created_unix", 0.0)))
+
+
+# ---------------------------------------------------------------------------
+# Measurement
+# ---------------------------------------------------------------------------
+
+def _time_call(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall seconds per call (device-blocking)."""
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def measure_crossover(
+    shapes: Optional[Sequence[Tuple[int, int, int]]] = None,
+    *,
+    config: Optional[RuntimeConfig] = None,
+    warmup: int = 1,
+    iters: int = 5,
+) -> List[ShapeTiming]:
+    """Time the AryPE and VPE execution paths for every shape in the grid.
+
+    Both paths run under ``config`` (ambient runtime when None) with the
+    policy forced, so ``use_pallas``/``interpret``/``accum_dtype`` match how
+    the router will actually execute on this backend.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import router
+
+    base = config if config is not None else current_runtime()
+    shapes = list(shapes) if shapes is not None else default_grid()
+    timings: List[ShapeTiming] = []
+    for m, k, n in shapes:
+        x = jax.random.normal(jax.random.PRNGKey(0), (m, k), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32)
+        per_path = {}
+        for policy in ("arype_only", "vpe_only"):
+            cfg = base.replace(policy=policy)
+            fn = jax.jit(lambda a, b, cfg=cfg: router.matmul(a, b, config=cfg))
+            per_path[policy] = _time_call(fn, x, w, warmup=warmup, iters=iters)
+        util = mxu_utilization(m, k, n, tile=base.mxu_tile, fill=base.fill_depth)
+        timings.append(ShapeTiming(m, k, n, util,
+                                   us_arype=per_path["arype_only"] * 1e6,
+                                   us_vpe=per_path["vpe_only"] * 1e6))
+    return timings
+
+
+# ---------------------------------------------------------------------------
+# Fit
+# ---------------------------------------------------------------------------
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(x - 1, 1).bit_length()
+
+
+def fit_crossover(
+    timings: Sequence[ShapeTiming],
+    *,
+    base: Optional[RuntimeConfig] = None,
+) -> Tuple[float, int]:
+    """Fit measured timings into ``(tau, vpe_max_elems)``.
+
+    ``tau`` is the utilization threshold whose rule "vpe iff util < tau"
+    agrees with the most measurements (ties break toward the smaller
+    threshold — prefer the throughput engine when the data is ambiguous).
+    ``vpe_max_elems`` is the largest working set the VPE path actually won,
+    rounded up to a power of two; with no VPE wins both fall back to the
+    analytic defaults.
+    """
+    cfg = base if base is not None else current_runtime()
+    if not timings:
+        return cfg.tau, cfg.vpe_max_elems
+    pts = sorted(timings, key=lambda t: t.util)
+    wins = [t.vpe_wins for t in pts]
+    if not any(wins):
+        # VPE never pays off here: close the window below the smallest
+        # observed utilization (tau must stay > 0).
+        return max(pts[0].util / 2, 1e-6), cfg.vpe_max_elems
+    utils = [t.util for t in pts]
+    candidates = [max(utils[0] / 2, 1e-6)]
+    candidates += [(a + b) / 2 for a, b in zip(utils, utils[1:]) if a < b]
+    candidates.append(1.0)
+    best_tau, best_score = candidates[0], -1
+    for tau in candidates:
+        score = sum(1 for t, w in zip(pts, wins) if (t.util < tau) == w)
+        if score > best_score:
+            best_tau, best_score = tau, score
+    vpe_max = max(t.elems for t in pts if t.vpe_wins)
+    return best_tau, _next_pow2(vpe_max)
+
+
+def calibrate(
+    shapes: Optional[Sequence[Tuple[int, int, int]]] = None,
+    *,
+    smoke: bool = False,
+    config: Optional[RuntimeConfig] = None,
+    warmup: int = 1,
+    iters: int = 5,
+) -> Calibration:
+    """Measure + fit: the one-call form used by the CLI and tests."""
+    base = config if config is not None else current_runtime()
+    shapes = list(shapes) if shapes is not None else default_grid(smoke=smoke)
+    timings = measure_crossover(shapes, config=base, warmup=warmup, iters=iters)
+    tau, vpe_max_elems = fit_crossover(timings, base=base)
+    return Calibration(tau=tau, vpe_max_elems=vpe_max_elems,
+                       fingerprint=platform.fingerprint(), timings=tuple(timings))
+
+
+# ---------------------------------------------------------------------------
+# Persistence (backend-keyed, schema-versioned)
+# ---------------------------------------------------------------------------
+
+def cache_dir() -> str:
+    """``$OCTOPUS_CACHE_DIR`` or ``~/.cache/octopus``."""
+    return os.environ.get("OCTOPUS_CACHE_DIR",
+                          os.path.join(os.path.expanduser("~"), ".cache", "octopus"))
+
+
+def cache_path(backend: Optional[str] = None) -> str:
+    """The backend-keyed default artifact path for this platform."""
+    return os.path.join(cache_dir(), f"calib-{backend or platform.backend()}.json")
+
+
+def save_calibration(calib: Calibration, path: Optional[str] = None) -> str:
+    """Write the artifact (default: the backend-keyed cache path); returns it."""
+    path = path or cache_path(calib.backend)
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(calib.to_dict(), f, indent=1, sort_keys=True)
+    return path
+
+
+def load_calibration(path: Optional[str] = None,
+                     backend: Optional[str] = None) -> Optional[Calibration]:
+    """Load an artifact (default: this platform's cache path).
+
+    Returns None — always with a warning naming the reason — when the file is
+    missing, unreadable, from a different schema version, or keyed to a
+    different backend, so callers degrade to the analytic defaults instead of
+    silently applying a stale or foreign measurement.
+    """
+    path = path or cache_path(backend)
+    if not os.path.exists(path):
+        warnings.warn(f"no calibration artifact at {path}; using analytic "
+                      "routing defaults (run `python -m repro.launch.calibrate`)",
+                      stacklevel=2)
+        return None
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+    except (OSError, ValueError) as e:
+        warnings.warn(f"unreadable calibration artifact {path} ({e}); using "
+                      "analytic routing defaults", stacklevel=2)
+        return None
+    version = raw.get("schema_version")
+    if version != SCHEMA_VERSION:
+        warnings.warn(f"calibration artifact {path} has schema_version="
+                      f"{version!r}, expected {SCHEMA_VERSION}; re-run "
+                      "`python -m repro.launch.calibrate` (using analytic "
+                      "routing defaults)", stacklevel=2)
+        return None
+    want = backend or platform.backend()
+    try:
+        calib = Calibration.from_dict(raw)
+    except (KeyError, TypeError, ValueError) as e:
+        warnings.warn(f"malformed calibration artifact {path} ({e}); using "
+                      "analytic routing defaults", stacklevel=2)
+        return None
+    if calib.backend != want:
+        warnings.warn(f"calibration artifact {path} was measured on backend="
+                      f"{calib.backend!r} but this process runs {want!r}; "
+                      "using analytic routing defaults", stacklevel=2)
+        return None
+    return calib

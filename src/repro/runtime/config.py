@@ -11,10 +11,21 @@ through the call stack as ad-hoc kwargs (``policy=``, ``use_pallas=``,
         y = router.matmul(x, w)          # no tuning kwargs anywhere
 
 Precedence, highest first:
-  1. deprecated explicit kwargs on ``router.matmul`` etc. (one release only)
-  2. an explicit ``config=`` argument
-  3. the innermost ``octopus_runtime`` / ``runtime_overrides`` context
-  4. :data:`DEFAULT_RUNTIME`
+  1. an explicit ``config=`` argument
+  2. the innermost ``octopus_runtime`` / ``runtime_overrides`` context
+  3. :data:`DEFAULT_RUNTIME`
+
+Two fields are not hand-picked constants:
+
+  * ``interpret`` defaults from the execution platform
+    (:mod:`repro.runtime.platform`): True on CPU hosts where Pallas kernels
+    only run in interpret mode, False on real TPU/GPU backends.
+  * ``tau`` / ``vpe_max_elems`` ship with the paper's analytic values but can
+    be replaced by measured crossover points: :meth:`RuntimeConfig.calibrated`
+    loads a :mod:`repro.runtime.autotune` artifact, and ``octopus_runtime``
+    accepts a ``Calibration`` directly.  A config whose thresholds came from a
+    measurement carries the artifact's platform fingerprint in
+    ``calibration`` (None for analytic defaults).
 
 The context is a :class:`contextvars.ContextVar`, so nesting, threads and
 async all behave.  Configs only influence *trace-time* routing decisions;
@@ -26,11 +37,13 @@ reason).
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from contextlib import contextmanager
 from contextvars import ContextVar
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+from functools import lru_cache
 from typing import Any, Iterator, Optional
+
+from repro.runtime import platform
 
 POLICIES = ("collaborative", "arype_only", "vpe_only")
 
@@ -45,10 +58,13 @@ class RuntimeConfig:
       * ``mxu_tile`` — systolic array edge of the target hardware.
       * ``fill_depth`` — minimum stream length to hide systolic fill latency.
       * ``vpe_max_elems`` — VPE-path working-set cap (M*K*N fp32 elements).
+      * ``calibration`` — platform fingerprint of the measured-crossover
+        artifact that produced ``tau``/``vpe_max_elems`` (None: analytic).
 
     Execution:
       * ``use_pallas`` — lower through the Pallas engine kernels.
-      * ``interpret`` — Pallas interpret mode (True for CPU validation).
+      * ``interpret`` — Pallas interpret mode (platform-derived: True on CPU
+        hosts, False on real TPU/GPU backends).
       * ``accum_dtype`` — accumulation dtype name for both engine paths.
       * ``fused_aggregation`` — fuse K-block partial aggregation (False
         reproduces the paper's "wo/ collaborating" ablation).
@@ -60,9 +76,10 @@ class RuntimeConfig:
     fill_depth: int = 8
     vpe_max_elems: int = 1 << 21
     use_pallas: bool = False
-    interpret: bool = True
+    interpret: bool = field(default_factory=platform.interpret_default)
     accum_dtype: str = "float32"
     fused_aggregation: bool = True
+    calibration: Optional[str] = None
 
     def __post_init__(self):
         if self.policy not in POLICIES:
@@ -76,15 +93,26 @@ class RuntimeConfig:
         return dataclasses.replace(self, **overrides) if overrides else self
 
     @classmethod
+    def calibrated(cls, path: Optional[str] = None, **overrides: Any) -> "RuntimeConfig":
+        """A config whose ``tau``/``vpe_max_elems`` come from the measured
+        crossover artifact at ``path`` (default: this platform's cache path,
+        see :func:`repro.runtime.autotune.load_calibration`).  Falls back to
+        the analytic defaults — with the loader's warning — when no usable
+        artifact exists; ``calibration`` is None in that case."""
+        from repro.runtime import autotune
+
+        calib = autotune.load_calibration(path)
+        base = calib.apply(cls()) if calib is not None else cls()
+        return base.replace(**overrides)
+
+    @classmethod
     def from_arch(cls, arch: Any, **overrides: Any) -> "RuntimeConfig":
         """Derive a runtime config from a model ArchConfig (duck-typed so the
         runtime package never imports ``repro.configs``).
 
-        ``interpret`` is inherited from the ambient runtime (default True,
-        which is what host/CPU emulation — including the dryrun's forced host
-        platform — needs).  A real-TPU launch must run inside
-        ``runtime_overrides(interpret=False)`` until platform-derived defaults
-        land (see ROADMAP)."""
+        ``interpret`` is inherited from the ambient runtime, whose default is
+        platform-derived (True under host/CPU emulation — including the
+        dryrun's forced host platform — False on real TPU/GPU backends)."""
         base = current_runtime()
         kw = {
             "policy": getattr(arch, "router_policy", base.policy),
@@ -95,19 +123,45 @@ class RuntimeConfig:
         return base.replace(**kw)
 
 
-DEFAULT_RUNTIME = RuntimeConfig()
+# DEFAULT_RUNTIME is constructed lazily (module __getattr__ below): building a
+# RuntimeConfig probes the JAX backend for the interpret default, and an
+# import-time probe would lock XLA_FLAGS/device discovery for consumers (the
+# dryrun/train launchers) that must set flags before anything touches jax.
+@lru_cache(maxsize=None)
+def _default_runtime() -> RuntimeConfig:
+    return RuntimeConfig()
 
-_active: ContextVar[RuntimeConfig] = ContextVar("octopus_runtime", default=DEFAULT_RUNTIME)
+
+def __getattr__(name: str) -> Any:
+    if name == "DEFAULT_RUNTIME":
+        return _default_runtime()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+_active: ContextVar[Optional[RuntimeConfig]] = ContextVar("octopus_runtime", default=None)
 
 
 def current_runtime() -> RuntimeConfig:
     """The innermost active config (or :data:`DEFAULT_RUNTIME`)."""
-    return _active.get()
+    cfg = _active.get()
+    return cfg if cfg is not None else _default_runtime()
 
 
 @contextmanager
-def octopus_runtime(config: RuntimeConfig) -> Iterator[RuntimeConfig]:
-    """Make ``config`` the ambient runtime within the block."""
+def octopus_runtime(config: Any) -> Iterator[RuntimeConfig]:
+    """Make ``config`` the ambient runtime within the block.
+
+    Besides a :class:`RuntimeConfig`, anything with an ``apply(base)`` method
+    is accepted — in particular a :class:`repro.runtime.autotune.Calibration`,
+    so ``with octopus_runtime(load_calibration(...)):`` applies measured
+    thresholds onto the currently active config."""
+    if not isinstance(config, RuntimeConfig):
+        if hasattr(config, "apply"):
+            config = config.apply(current_runtime())
+        else:
+            raise TypeError(
+                f"octopus_runtime expects a RuntimeConfig or an object with "
+                f".apply(base), got {type(config).__name__}")
     token = _active.set(config)
     try:
         yield config
@@ -123,25 +177,10 @@ def runtime_overrides(**overrides: Any) -> Iterator[RuntimeConfig]:
         yield cfg
 
 
-def resolve_config(config: Optional[RuntimeConfig] = None, **deprecated: Any) -> RuntimeConfig:
-    """Resolve ``config`` (or the ambient runtime) plus deprecated explicit
-    kwarg overrides; warns once per call for any non-None deprecated kwarg.
+def resolve_config(config: Optional[RuntimeConfig] = None) -> RuntimeConfig:
+    """``config`` when given, else the ambient runtime.
 
-    ``accum_dtype`` values are normalized to dtype names so callers may keep
-    passing ``jnp.float32`` etc.
-    """
-    cfg = config if config is not None else current_runtime()
-    live = {k: v for k, v in deprecated.items() if v is not None}
-    if live:
-        if "accum_dtype" in live:
-            import numpy as np
-
-            live["accum_dtype"] = np.dtype(live["accum_dtype"]).name
-        warnings.warn(
-            f"explicit {sorted(live)} kwargs are deprecated; pass a RuntimeConfig "
-            "via config= or enter `with octopus_runtime(cfg):` instead",
-            DeprecationWarning,
-            stacklevel=3,
-        )
-        cfg = cfg.replace(**live)
-    return cfg
+    (The deprecated per-call kwarg overrides this function used to absorb —
+    ``policy=``/``use_pallas=``/``interpret=``/... — were removed on the PR 1
+    schedule; pass a RuntimeConfig or enter ``octopus_runtime``.)"""
+    return config if config is not None else current_runtime()

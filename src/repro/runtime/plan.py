@@ -110,6 +110,8 @@ class RoutePlan:
         cfg = self.config
         head = (f"RoutePlan: {len(self.steps)} matmuls | policy={cfg.policy} "
                 f"tau={cfg.tau} mxu_tile={cfg.mxu_tile} fill_depth={cfg.fill_depth}")
+        if cfg.calibration:
+            head += f" [calibrated: {cfg.calibration}]"
         if not self.steps:
             return head + "\n  (empty)"
         name_w = max(len(s.name) for s in self.steps)

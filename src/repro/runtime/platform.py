@@ -1,0 +1,87 @@
+"""Execution-platform probing (ROADMAP: platform-derived runtime defaults).
+
+``RuntimeConfig`` used to hard-code ``interpret=True`` — right for CPU hosts
+(Pallas kernels only run there in interpret mode) and silently wrong on a real
+TPU/GPU, where every ``--use-pallas`` launch needed a manual
+``runtime_overrides(interpret=False)``.  This module asks JAX what it is
+actually running on, once, and the answers become the config defaults.
+
+Probes are cached (the backend cannot change within a process) and never
+raise: an unimportable or uninitializable JAX degrades to conservative CPU
+answers, so this module is safe to use at config-construction time.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import Dict
+
+# Backends where the Pallas kernels compile for real hardware; anything else
+# (cpu, interpreters, mocks) needs interpret mode.
+_ACCELERATOR_BACKENDS = frozenset({"tpu", "gpu", "cuda", "rocm"})
+
+
+@lru_cache(maxsize=None)
+def backend() -> str:
+    """The active JAX backend name ("cpu", "gpu", "tpu"); "cpu" on failure."""
+    try:
+        import jax
+
+        return jax.default_backend()
+    except Exception:
+        return "cpu"
+
+
+@lru_cache(maxsize=None)
+def device_kind() -> str:
+    """Hardware kind of device 0 (e.g. "cpu", "TPU v4"); "unknown" on failure."""
+    try:
+        import jax
+
+        return jax.devices()[0].device_kind
+    except Exception:
+        return "unknown"
+
+
+@lru_cache(maxsize=None)
+def pallas_available() -> bool:
+    """Whether the Pallas engine kernels can be imported at all."""
+    try:
+        import jax.experimental.pallas  # noqa: F401
+
+        return True
+    except Exception:
+        return False
+
+
+def is_accelerator() -> bool:
+    """True when running on a real TPU/GPU backend (not host emulation)."""
+    return backend() in _ACCELERATOR_BACKENDS
+
+
+def interpret_default() -> bool:
+    """Platform-correct ``RuntimeConfig.interpret``: Pallas interpret mode is
+    required on CPU hosts and wrong (slow, and unsupported ops) on real
+    accelerators."""
+    return not is_accelerator()
+
+
+def fingerprint() -> Dict[str, str]:
+    """Identity of the execution platform, embedded in calibration artifacts
+    so a cache written on one target is never silently applied to another."""
+    try:
+        import jax
+
+        jax_version = jax.__version__
+    except Exception:
+        jax_version = "unknown"
+    return {
+        "backend": backend(),
+        "device_kind": device_kind(),
+        "jax": jax_version,
+    }
+
+
+def fingerprint_id(fp: Dict[str, str] | None = None) -> str:
+    """Short one-line form of :func:`fingerprint` ("cpu/cpu/jax-0.4.37")."""
+    fp = fp if fp is not None else fingerprint()
+    return f"{fp['backend']}/{fp['device_kind']}/jax-{fp['jax']}"

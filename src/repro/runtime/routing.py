@@ -65,10 +65,18 @@ def systolic_utilization(m: int, k: int, n: int, array: int) -> float:
     return useful / slots
 
 
-def mxu_utilization(m: int, k: int, n: int, tile: int = RuntimeConfig.mxu_tile,
-                    fill: int = RuntimeConfig.fill_depth) -> float:
+def mxu_utilization(m: int, k: int, n: int, tile: Optional[int] = None,
+                    fill: Optional[int] = None) -> float:
     """TPU routing cost model: stationary-tile fill (K, N padding waste) plus
-    the sublane granularity penalty on the streamed M dimension."""
+    the sublane granularity penalty on the streamed M dimension.
+
+    ``tile``/``fill`` default from the *ambient* runtime (not the frozen
+    class defaults, which would silently ignore an active
+    ``runtime_overrides(mxu_tile=...)`` when called directly)."""
+    if tile is None or fill is None:
+        cfg = current_runtime()
+        tile = cfg.mxu_tile if tile is None else tile
+        fill = cfg.fill_depth if fill is None else fill
     fill_k = k / (ceil_div(k, tile) * tile)
     fill_n = n / (ceil_div(n, tile) * tile)
     stream = m / (ceil_div(m, fill) * fill)

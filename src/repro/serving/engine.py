@@ -8,7 +8,6 @@ the AryPE-like engine; both share the cache through the "memory fabric"
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Any, Optional
 

@@ -14,19 +14,14 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Any, Callable
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import decisions
-from repro.core.feature_extractor import (
-    ExtractorConfig,
-    FeatureExtractor,
-    derive_whole_features,
-    packet_meta_features,
-)
+from repro.core.feature_extractor import packet_meta_features
 from repro.core.flow_tracker import PacketBatch
 from repro.models import paper_models
 from repro.runtime import RoutePlan, RuntimeConfig, resolve_config
@@ -54,10 +49,9 @@ class PacketPath:
     ambient runtime) and baked into the jit'd callable — jit caches by shapes,
     not by ambient context, so later context changes must not retune it."""
 
-    def __init__(self, params: Any, *, config: Optional[RuntimeConfig] = None,
-                 policy: Optional[str] = None):
+    def __init__(self, params: Any, *, config: Optional[RuntimeConfig] = None):
         self.params = params
-        self.runtime = resolve_config(config, policy=policy)
+        self.runtime = resolve_config(config)
         self.rules = decisions.RuleTable()
         self._infer = jax.jit(
             lambda p, x: decisions.decide_binary(
@@ -92,12 +86,10 @@ class FlowPath:
     """Use-cases 2/3: flow-granularity classification over ready flows."""
 
     def __init__(self, params: Any, model: str = "cnn", *,
-                 config: Optional[RuntimeConfig] = None,
-                 policy: Optional[str] = None, fused_aggregation: Optional[bool] = None):
+                 config: Optional[RuntimeConfig] = None):
         self.params = params
         self.model = model
-        self.runtime = resolve_config(config, policy=policy,
-                                      fused_aggregation=fused_aggregation)
+        self.runtime = resolve_config(config)
         self.rules = decisions.RuleTable()
         if model == "cnn":
             self._fn = lambda p, x: paper_models.cnn_apply(p, x, config=self.runtime)

@@ -3,8 +3,7 @@ with optional microbatched gradient accumulation and int8 gradient compression.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

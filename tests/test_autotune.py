@@ -1,0 +1,251 @@
+"""Calibration subsystem: platform probe defaults, measured-crossover fit,
+artifact round-trip, schema/backend guards, and analytic-vs-calibrated
+placement divergence (the self-tuning acceptance path)."""
+import json
+import warnings
+
+import pytest
+
+from repro.core import router
+from repro.runtime import (
+    DEFAULT_RUNTIME,
+    RoutePlan,
+    RuntimeConfig,
+    autotune,
+    current_runtime,
+    octopus_runtime,
+    platform,
+    runtime_overrides,
+)
+from repro.runtime.autotune import (
+    Calibration,
+    ShapeTiming,
+    fit_crossover,
+    load_calibration,
+    save_calibration,
+)
+
+
+def _timing(m, k, n, vpe_wins, base=DEFAULT_RUNTIME):
+    util = router.mxu_utilization(m, k, n, tile=base.mxu_tile, fill=base.fill_depth)
+    us_a, us_v = (2.0, 1.0) if vpe_wins else (1.0, 2.0)
+    return ShapeTiming(m, k, n, util, us_arype=us_a, us_vpe=us_v)
+
+
+def _calib(tau=0.6, vpe_max_elems=1 << 21, backend=None, **kw):
+    fp = dict(platform.fingerprint())
+    if backend is not None:
+        fp["backend"] = backend
+    return Calibration(tau=tau, vpe_max_elems=vpe_max_elems, fingerprint=fp, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Platform probe
+# ---------------------------------------------------------------------------
+
+def test_platform_probe_on_cpu_host():
+    # The test container is a CPU host: Pallas needs interpret mode there.
+    assert platform.backend() == "cpu"
+    assert not platform.is_accelerator()
+    assert platform.interpret_default() is True
+
+
+def test_runtime_config_default_interpret_is_platform_derived():
+    assert RuntimeConfig().interpret == platform.interpret_default()
+    assert DEFAULT_RUNTIME.interpret is True  # CPU container
+
+
+def test_fingerprint_identifies_backend():
+    fp = platform.fingerprint()
+    assert fp["backend"] == "cpu"
+    assert platform.fingerprint_id(fp).startswith("cpu/")
+
+
+# ---------------------------------------------------------------------------
+# Crossover fit (pure function, synthetic timings)
+# ---------------------------------------------------------------------------
+
+def test_fit_separates_clean_crossover():
+    # VPE wins exactly the low-utilization shapes: tau must land between the
+    # highest vpe-winning util and the lowest arype-winning util.
+    low = [_timing(10, 3, 32, vpe_wins=True), _timing(64, 3, 8, vpe_wins=True)]
+    high = [_timing(512, 128, 128, vpe_wins=False),
+            _timing(4096, 256, 512, vpe_wins=False)]
+    tau, vpe_max = fit_crossover(low + high)
+    assert max(t.util for t in low) < tau <= min(t.util for t in high)
+    assert vpe_max >= max(t.elems for t in low)
+    # the fitted thresholds route those shapes the way they measured
+    cfg = RuntimeConfig(tau=tau, vpe_max_elems=vpe_max)
+    for t in low:
+        assert router.route_matmul(t.m, t.k, t.n, config=cfg).path == "vpe"
+    for t in high:
+        assert router.route_matmul(t.m, t.k, t.n, config=cfg).path == "arype"
+
+
+def test_fit_no_vpe_wins_closes_the_window():
+    timings = [_timing(512, 128, 128, vpe_wins=False),
+               _timing(64, 3, 8, vpe_wins=False)]
+    tau, vpe_max = fit_crossover(timings)
+    assert 0.0 < tau < min(t.util for t in timings)
+    assert vpe_max == DEFAULT_RUNTIME.vpe_max_elems  # analytic fallback
+    cfg = RuntimeConfig(tau=tau, vpe_max_elems=vpe_max)
+    assert all(router.route_matmul(t.m, t.k, t.n, config=cfg).path == "arype"
+               for t in timings)
+
+
+def test_fit_empty_returns_analytic_defaults():
+    assert fit_crossover([]) == (DEFAULT_RUNTIME.tau, DEFAULT_RUNTIME.vpe_max_elems)
+
+
+# ---------------------------------------------------------------------------
+# Artifact round-trip + guards
+# ---------------------------------------------------------------------------
+
+def test_cache_roundtrip_identical_config(tmp_path):
+    path = str(tmp_path / "calib.json")
+    calib = _calib(tau=0.42, vpe_max_elems=1 << 16,
+                   timings=(_timing(10, 3, 32, vpe_wins=True),))
+    save_calibration(calib, path)
+    loaded = load_calibration(path)
+    assert loaded == calib
+    assert loaded.apply(RuntimeConfig()) == calib.apply(RuntimeConfig())
+    cfg = loaded.apply(RuntimeConfig())
+    assert (cfg.tau, cfg.vpe_max_elems) == (0.42, 1 << 16)
+    assert cfg.calibration == calib.fingerprint_id
+
+
+def test_schema_version_mismatch_warns_and_falls_back(tmp_path):
+    path = str(tmp_path / "calib.json")
+    save_calibration(_calib(), path)
+    raw = json.loads(open(path).read())
+    raw["schema_version"] = autotune.SCHEMA_VERSION + 1
+    with open(path, "w") as f:
+        json.dump(raw, f)
+    with pytest.warns(UserWarning, match="schema_version"):
+        assert load_calibration(path) is None
+    with pytest.warns(UserWarning, match="schema_version"):
+        cfg = RuntimeConfig.calibrated(path)
+    assert cfg.tau == DEFAULT_RUNTIME.tau
+    assert cfg.calibration is None
+
+
+def test_missing_artifact_warns_and_falls_back(tmp_path):
+    path = str(tmp_path / "nope.json")
+    with pytest.warns(UserWarning, match="no calibration artifact"):
+        cfg = RuntimeConfig.calibrated(path)
+    assert cfg == DEFAULT_RUNTIME
+
+
+def test_foreign_backend_artifact_is_rejected(tmp_path):
+    path = str(tmp_path / "calib.json")
+    save_calibration(_calib(backend="tpu"), path)
+    with pytest.warns(UserWarning, match="backend"):
+        assert load_calibration(path) is None
+
+
+def test_corrupt_artifact_warns_and_falls_back(tmp_path):
+    path = str(tmp_path / "calib.json")
+    with open(path, "w") as f:
+        f.write("{not json")
+    with pytest.warns(UserWarning, match="unreadable"):
+        assert load_calibration(path) is None
+
+
+def test_default_cache_path_is_backend_keyed(tmp_path, monkeypatch):
+    monkeypatch.setenv("OCTOPUS_CACHE_DIR", str(tmp_path))
+    assert autotune.cache_path() == str(tmp_path / "calib-cpu.json")
+    path = save_calibration(_calib(tau=0.5))
+    assert path == str(tmp_path / "calib-cpu.json")
+    assert load_calibration().tau == 0.5
+
+
+# ---------------------------------------------------------------------------
+# Calibrated routing: analytic vs measured placement can diverge
+# ---------------------------------------------------------------------------
+
+def test_calibrated_config_changes_a_route(tmp_path):
+    """(128,64)x(64,96): util 0.375 — arype under the analytic tau=0.35, vpe
+    under a measured tau of 0.6.  The divergence must survive the artifact
+    round-trip (save -> load -> calibrated())."""
+    path = str(tmp_path / "calib.json")
+    save_calibration(_calib(tau=0.6, vpe_max_elems=1 << 21), path)
+    calibrated = RuntimeConfig.calibrated(path)
+    analytic = router.route_matmul(128, 64, 96, config=DEFAULT_RUNTIME)
+    measured = router.route_matmul(128, 64, 96, config=calibrated)
+    assert (analytic.path, measured.path) == ("arype", "vpe")
+
+
+def test_octopus_runtime_accepts_a_calibration(tmp_path):
+    path = str(tmp_path / "calib.json")
+    save_calibration(_calib(tau=0.6), path)
+    with runtime_overrides(policy="collaborative", mxu_tile=64):
+        with octopus_runtime(load_calibration(path)) as cfg:
+            # applied onto the *ambient* config, not a fresh default
+            assert cfg.mxu_tile == 64 and cfg.tau == 0.6
+            assert current_runtime().calibration == cfg.calibration is not None
+    assert current_runtime().calibration is None
+
+
+def test_plan_and_cycle_report_record_calibration(tmp_path):
+    from repro.core.collaborative import OctopusCycleModel, usecase2_layers
+
+    path = str(tmp_path / "calib.json")
+    save_calibration(_calib(tau=0.6), path)
+    cfg = RuntimeConfig.calibrated(path)
+    plan = RoutePlan.from_layers(usecase2_layers(1000), config=cfg)
+    assert "[calibrated:" in plan.explain()
+    rep = OctopusCycleModel().stack_report(plan, collaborative=True)
+    assert rep["calibration"] == cfg.calibration
+    analytic_rep = OctopusCycleModel().stack_report(
+        RoutePlan.from_layers(usecase2_layers(1000)), collaborative=True)
+    assert analytic_rep["calibration"] is None
+
+
+# ---------------------------------------------------------------------------
+# End-to-end measurement (tiny grid; CPU timings are noisy, so assert
+# structure and constraints rather than which engine won)
+# ---------------------------------------------------------------------------
+
+def test_measure_and_calibrate_smoke(tmp_path):
+    shapes = [(8, 3, 8), (256, 128, 128)]
+    calib = autotune.calibrate(shapes, iters=1, warmup=0)
+    assert len(calib.timings) == 2
+    assert all(t.us_arype > 0 and t.us_vpe > 0 for t in calib.timings)
+    assert 0.0 < calib.tau <= 1.0
+    assert calib.vpe_max_elems > 0
+    assert calib.backend == "cpu"
+    path = save_calibration(calib, str(tmp_path / "calib.json"))
+    assert load_calibration(path) == calib
+
+
+def test_calibrate_cli_writes_artifact(tmp_path, capsys):
+    from repro.launch import calibrate as cli
+
+    out = str(tmp_path / "calib.json")
+    assert cli.main(["--out", out, "--smoke", "--iters", "1"]) == 0
+    raw = json.load(open(out))
+    assert raw["schema_version"] == autotune.SCHEMA_VERSION
+    assert raw["fingerprint"]["backend"] == "cpu"
+    text = capsys.readouterr().out
+    assert "placement divergence" in text
+    loaded = load_calibration(out)
+    assert isinstance(loaded.apply(RuntimeConfig()), RuntimeConfig)
+
+
+def test_divergence_report_names_moved_layers():
+    from repro.launch.calibrate import divergence_report
+
+    # conv2 (10000,96,32): util 0.1875, working set 30.7M elems — moves to vpe
+    # once the measured tau and cap both open up.
+    report = divergence_report(RuntimeConfig(tau=0.6, vpe_max_elems=1 << 25),
+                               flows=1000)
+    assert "conv2" in report and "arype -> vpe" in report
+
+
+def test_warnings_are_not_raised_on_happy_path(tmp_path):
+    path = str(tmp_path / "calib.json")
+    save_calibration(_calib(), path)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        load_calibration(path)
+        RuntimeConfig.calibrated(path)

@@ -1,7 +1,6 @@
 """Checkpointing: roundtrip, atomicity, retention, async error surfacing,
 and bit-exact resume through the trainer."""
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis_compat import given, settings, st
 
 from repro.distributed.compression import (
@@ -10,7 +9,6 @@ from repro.distributed.compression import (
     decode_int8,
     decompress_tree,
     encode_int8,
-    init_error_feedback,
 )
 
 

@@ -1,6 +1,5 @@
 """Data pipelines: determinism, shard partition, learnability, packet traces."""
 import numpy as np
-import pytest
 
 from repro.data.packets import PacketTraceConfig, synth_packet_trace
 from repro.data.tokens import TokenPipeline, TokenPipelineConfig
@@ -23,7 +22,7 @@ def test_token_labels_shifted():
 
 def test_shards_partition_global_batch():
     base = TokenPipelineConfig(vocab_size=64, seq_len=8, global_batch=8, seed=1)
-    full = TokenPipeline(base).batch(4)
+    TokenPipeline(base).batch(4)
     # different shards must produce different data; same shard reproducible
     s0 = TokenPipeline(base.__class__(**{**base.__dict__, "num_shards": 2, "shard": 0})).batch(4)
     s1 = TokenPipeline(base.__class__(**{**base.__dict__, "num_shards": 2, "shard": 1})).batch(4)

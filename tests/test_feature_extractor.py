@@ -1,9 +1,7 @@
 """Feature extracting domain: tracker semantics (establish/update/evict/ready/
 release), scan-vs-segmented equivalence, whole-feature derivation (Table 7)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis_compat import given, settings, st
 
 from repro.core import flow_tracker as ft

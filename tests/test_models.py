@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import SHAPES, get_config, list_archs, reduced_config
+from repro.configs import get_config, list_archs, reduced_config
 from repro.models import LM
 
 ARCHS = list_archs()

@@ -1,5 +1,4 @@
 """MoE: dispatch vs dense reference, capacity semantics, EP shardability."""
-import functools
 
 import jax
 import jax.numpy as jnp

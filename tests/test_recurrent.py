@@ -3,7 +3,6 @@ recurrences (the gold standard for SSD / mLSTM correctness)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config, reduced_config
 from repro.models import recurrent as rec

@@ -1,10 +1,8 @@
 """Roofline machinery: HLO collective parsing, term math, report rendering."""
 import json
 
-import pytest
 
 from repro.launch.roofline import Roofline, parse_collectives
-from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 
 HLO = """
 HloModule jit_step, entry_computation_layout={...}

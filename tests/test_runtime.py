@@ -1,6 +1,7 @@
 """The unified Octopus runtime: RuntimeConfig context semantics (nesting,
-override precedence, validation), RoutePlan as the single placement truth
-(trace == from_layers == cycle model), and deprecated-kwarg back-compat."""
+override precedence, validation) and RoutePlan as the single placement truth
+(trace == from_layers == cycle model).  Calibration is covered in
+test_autotune.py."""
 import warnings
 
 import jax
@@ -88,33 +89,11 @@ def test_tau_and_vpe_cap_are_live_knobs():
 
 
 # ---------------------------------------------------------------------------
-# Deprecated kwarg back-compat (one release)
+# The config-first API (the deprecated per-call kwargs were removed on the
+# PR 1 schedule — passing them is now a TypeError)
 # ---------------------------------------------------------------------------
 
-def test_deprecated_policy_kwarg_warns_and_overrides():
-    with pytest.warns(DeprecationWarning):
-        r = router.route_matmul(4096, 4096, 4096, policy="vpe_only")
-    assert r.path == "vpe"
-
-
-def test_deprecated_matmul_kwargs_match_config_path():
-    x = jax.random.normal(jax.random.PRNGKey(0), (16, 24), jnp.float32)
-    w = jax.random.normal(jax.random.PRNGKey(1), (24, 8), jnp.float32)
-    with pytest.warns(DeprecationWarning):
-        a = router.matmul(x, w, policy="arype_only", use_pallas=False)
-    b = router.matmul(x, w, config=RuntimeConfig(policy="arype_only"))
-    np.testing.assert_allclose(np.asarray(a), np.asarray(b))
-
-
-def test_deprecated_kwargs_beat_explicit_config():
-    with pytest.warns(DeprecationWarning):
-        r = router.route_matmul(4096, 4096, 4096,
-                                config=RuntimeConfig(policy="arype_only"),
-                                policy="vpe_only")
-    assert r.path == "vpe"
-
-
-def test_new_api_does_not_warn():
+def test_api_does_not_warn():
     with warnings.catch_warnings():
         warnings.simplefilter("error", DeprecationWarning)
         router.matmul(jnp.ones((4, 4)), jnp.ones((4, 4)),
@@ -122,13 +101,15 @@ def test_new_api_does_not_warn():
         router.route_matmul(32, 32, 32)
 
 
-def test_deprecated_model_kwargs_still_work():
+def test_removed_kwargs_are_rejected():
+    with pytest.raises(TypeError):
+        router.route_matmul(4096, 4096, 4096, policy="vpe_only")
+    with pytest.raises(TypeError):
+        router.matmul(jnp.ones((4, 4)), jnp.ones((4, 4)), use_pallas=False)
     params = paper_models.init_paper_model("mlp", jax.random.PRNGKey(0))
-    x = jnp.ones((4, 6), jnp.float32)
-    with pytest.warns(DeprecationWarning):
-        a = paper_models.mlp_apply(params, x, policy="arype_only")
-    b = paper_models.mlp_apply(params, x, config=RuntimeConfig(policy="arype_only"))
-    np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+    with pytest.raises(TypeError):
+        paper_models.mlp_apply(params, jnp.ones((4, 6), jnp.float32),
+                               policy="arype_only")
 
 
 # ---------------------------------------------------------------------------

@@ -71,7 +71,6 @@ def test_cnn_matmul_mapping_matches_paper():
     f = 3
     x = jnp.zeros((f, paper_models.CNN_SEQ))
     shapes = []
-    orig = jax.numpy.concatenate
 
     # capture conv input widths by probing layer dims directly
     h = x[..., :, None]
