@@ -1,0 +1,76 @@
+"""Streaming pipeline benchmark: sustained pkt/s and flow/s over the fused
+step (paper headline rows: 31 Mpkt/s extraction, 90 kflow/s use-case 2,
+35.7 kflow/s use-case 3).
+
+    PYTHONPATH=src python benchmarks/bench_pipeline.py [--smoke]
+
+Rows land in ``benchmarks/run.py --json`` artifacts (CI bench-smoke), so the
+pkt/s / flow/s trajectory is trackable across commits.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import row  # noqa: E402
+
+
+def _bench_one(flow_model: str, steps: int, batch: int, max_ready: int,
+               table_size: int, active_flows: int, seed: int = 0):
+    import jax
+
+    from repro.data.traffic import TrafficConfig, TrafficGenerator
+    from repro.models import paper_models
+    from repro.serving import OctopusPipeline, PipelineConfig
+
+    kw = {} if flow_model == "cnn" else {"top_n": 8}
+    cfg = PipelineConfig(batch_size=batch, max_ready=max_ready,
+                         flow_model=flow_model, table_size=table_size, **kw)
+    pkt_params = paper_models.init_paper_model("mlp", jax.random.PRNGKey(0))
+    flow_params = paper_models.init_paper_model(flow_model, jax.random.PRNGKey(1))
+    pipe = OctopusPipeline(pkt_params, flow_params, cfg)
+    gen = TrafficGenerator(TrafficConfig(
+        batch_size=batch, active_flows=active_flows, elephant_fraction=0.3,
+        table_size=table_size, seed=seed))
+    pipe.warmup()
+    stats = pipe.run(gen, steps=steps)
+    return pipe, stats
+
+
+def run(steps: int = 40, smoke: bool = False):
+    """Yield CSV rows (name,us_per_call,derived) for both flow models.
+
+    Grid: (flow_model, batch, max_ready, table_size, active_flows) — the
+    population is sized so elephants cross the ready threshold well within
+    ``steps`` and the flow engine actually runs."""
+    grid = ([("cnn", 32, 8, 256, 12)] if smoke
+            else [("cnn", 32, 8, 1024, 16), ("cnn", 128, 16, 1024, 64),
+                  ("transformer", 64, 8, 1024, 32)])
+    steps = min(steps, 15) if smoke else steps
+    for flow_model, batch, max_ready, table_size, active_flows in grid:
+        pipe, s = _bench_one(flow_model, steps, batch, max_ready, table_size,
+                             active_flows)
+        yield row(
+            f"pipeline_{flow_model}_b{batch}", s.step_us,
+            f"pkt_per_s={s.pkt_per_s:.0f};flow_per_s={s.flow_per_s:.1f};"
+            f"steps={s.steps};flows={s.flows};evicted={s.evicted};"
+            f"trace_count={pipe.trace_count}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="streaming pipeline benchmark")
+    ap.add_argument("--smoke", action="store_true",
+                    help="single small config for per-PR CI")
+    ap.add_argument("--steps", type=int, default=40)
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    for r in run(steps=args.steps, smoke=args.smoke):
+        print(r)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -39,6 +39,7 @@ def _suites(smoke: bool) -> list:
         bench_feature_extractor,
         bench_inventory,
         bench_kernels,
+        bench_pipeline,
         bench_usecase1_mlp,
         bench_usecase3_transformer,
     )
@@ -50,6 +51,7 @@ def _suites(smoke: bool) -> list:
             ("usecase1_mlp(T5)", bench_usecase1_mlp.run),
             ("collaborative(T6)", lambda: bench_collaborative.run(flows=200)),
             ("usecase3_transformer", lambda: bench_usecase3_transformer.run(flows=100)),
+            ("pipeline(streaming)", lambda: bench_pipeline.run(smoke=True)),
         ]
     return [
         ("inventory(T4)", bench_inventory.run),
@@ -58,6 +60,7 @@ def _suites(smoke: bool) -> list:
         ("usecase3_transformer", bench_usecase3_transformer.run),
         ("feature_extractor", bench_feature_extractor.run),
         ("kernels", bench_kernels.run),
+        ("pipeline(streaming)", bench_pipeline.run),
     ]
 
 

@@ -22,9 +22,15 @@ class RuleTable:
     def update(self, flow_ids: np.ndarray, actions: np.ndarray, classes: Optional[np.ndarray] = None):
         self.generation += 1
         for i, fid in enumerate(np.asarray(flow_ids).tolist()):
-            self.rules[int(fid)] = {
+            fid = int(fid)
+            if classes is not None:
+                cls = int(classes[i])
+            else:  # packet-granularity update: keep the last known flow class
+                prev = self.rules.get(fid)
+                cls = prev["class"] if prev is not None else -1
+            self.rules[fid] = {
                 "action": ACTIONS[int(actions[i])],
-                "class": int(classes[i]) if classes is not None else -1,
+                "class": cls,
                 "generation": self.generation,
             }
 

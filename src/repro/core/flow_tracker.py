@@ -77,6 +77,15 @@ def hash_slot(tuple_hash: jax.Array, table_size: int) -> jax.Array:
     return (h % jnp.uint32(table_size)).astype(jnp.int32)
 
 
+def hash_slot_scalar(tuple_hash: int, table_size: int) -> int:
+    """:func:`hash_slot` for one host-side int (no device dispatch) — used by
+    hot host loops like the traffic generator's collision avoidance.  Must
+    stay bit-identical to the array version (tested)."""
+    h = ((tuple_hash & 0xFFFFFFFF) * 0x9E3779B1) & 0xFFFFFFFF
+    h ^= h >> 16
+    return int(h % table_size)
+
+
 def build_meta(pkt, arv_intv: jax.Array) -> jax.Array:
     """Assemble the meta register (paper Table 2) for one packet."""
     m = jnp.zeros((META_WIDTH,), jnp.int32)
@@ -162,3 +171,69 @@ def release_flows(state: TrackerState, slots: jax.Array) -> TrackerState:
         count=state.count.at[slots].set(0),
         features=state.features.at[slots].set(fresh_feature_word()),
     )
+
+
+class DrainResult(NamedTuple):
+    """Up to ``max_ready`` emitted ready flows, fixed shapes (R = max_ready).
+    Rows with ``mask == False`` are padding (slot == table_size, zeros)."""
+
+    slots: jax.Array  # (R,) int32; table_size for padding rows
+    mask: jax.Array  # (R,) bool — row holds a real emitted flow
+    tuple_id: jax.Array  # (R,) int32
+    count: jax.Array  # (R,) int32 (>= top_n wherever mask)
+    features: jax.Array  # (R, 16) int32
+    series: jax.Array  # (R, top_n) int32
+    sizes: jax.Array  # (R, top_n) int32
+    payload: jax.Array  # (R, top_k, pay_bytes) int32
+
+
+def ready_mask(state: TrackerState, *, top_n: int) -> jax.Array:
+    """(F,) bool — flows that have delivered their top-n packets and await
+    emission (the in-flight FIFO contents, §3.1)."""
+    return state.count >= top_n
+
+
+def drain_ready(state: TrackerState, *, top_n: int,
+                max_ready: int) -> tuple[TrackerState, DrainResult]:
+    """Consume ready-flow emission: read out up to ``max_ready`` flows whose
+    ``count >= top_n`` (lowest slots first, deterministically) and recycle
+    their table entries (paper: pop the in-flight FIFO, zero the packet
+    number).  Output shapes are static, so the step jit/scan-compiles; flows
+    beyond ``max_ready`` stay ready and drain on a later call."""
+    table_size = state.tuple_id.shape[0]
+    if not 0 < max_ready <= table_size:
+        raise ValueError(f"max_ready must be in [1, {table_size}], got {max_ready}")
+    ready = ready_mask(state, top_n=top_n)
+    # smallest `max_ready` ready slot indices, padded with table_size
+    keys = jnp.where(ready, jnp.arange(table_size, dtype=jnp.int32),
+                     jnp.int32(table_size))
+    slots = -jax.lax.top_k(-keys, max_ready)[0]
+    mask = slots < table_size
+    safe = jnp.where(mask, slots, 0)
+
+    def emit(rows: jax.Array, fill) -> jax.Array:
+        m = mask.reshape((max_ready,) + (1,) * (rows.ndim - 1))
+        return jnp.where(m, rows[safe], fill)
+
+    out = DrainResult(
+        slots=jnp.where(mask, slots, table_size),
+        mask=mask,
+        tuple_id=emit(state.tuple_id, 0),
+        count=emit(state.count, 0),
+        features=emit(state.features, 0),
+        series=emit(state.series, 0),
+        sizes=emit(state.sizes, 0),
+        payload=emit(state.payload, 0),
+    )
+    # recycle: padding rows index table_size -> out of bounds -> dropped
+    upd = out.slots
+    state2 = state._replace(
+        tuple_id=state.tuple_id.at[upd].set(0, mode="drop"),
+        count=state.count.at[upd].set(0, mode="drop"),
+        last_ts=state.last_ts.at[upd].set(0, mode="drop"),
+        features=state.features.at[upd].set(fresh_feature_word(), mode="drop"),
+        series=state.series.at[upd].set(0, mode="drop"),
+        sizes=state.sizes.at[upd].set(0, mode="drop"),
+        payload=state.payload.at[upd].set(0, mode="drop"),
+    )
+    return state2, out

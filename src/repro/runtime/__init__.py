@@ -46,6 +46,7 @@ from repro.runtime.routing import (
     Route,
     RouteRecord,
     mxu_utilization,
+    name_scope,
     record_routes,
     route_matmul,
     systolic_utilization,
@@ -67,6 +68,7 @@ __all__ = [
     "load_calibration",
     "measure_crossover",
     "mxu_utilization",
+    "name_scope",
     "octopus_runtime",
     "platform",
     "record_routes",

@@ -101,6 +101,14 @@ class RoutePlan:
         """``{step name: engine}`` placement map."""
         return {s.name: s.engine for s in self.steps}
 
+    def scoped(self, prefix: str) -> "RoutePlan":
+        """The sub-plan of steps recorded under ``name_scope(prefix)`` (see
+        :func:`repro.runtime.routing.name_scope`) — same config, so a
+        composite trace stays queryable per sub-model."""
+        p = prefix.rstrip("/") + "/"
+        return RoutePlan(self.config,
+                         tuple(s for s in self.steps if s.name.startswith(p)))
+
     def macs(self, engine: Optional[str] = None) -> int:
         return sum(s.macs for s in self.steps if engine is None or s.engine == engine)
 

@@ -42,6 +42,7 @@ class RouteRecord:
 
 
 _recorder: ContextVar[Optional[List[RouteRecord]]] = ContextVar("route_recorder", default=None)
+_name_scope: ContextVar[str] = ContextVar("route_name_scope", default="")
 
 
 @contextmanager
@@ -53,6 +54,20 @@ def record_routes() -> Iterator[List[RouteRecord]]:
         yield records
     finally:
         _recorder.reset(token)
+
+
+@contextmanager
+def name_scope(label: str) -> Iterator[None]:
+    """Prefix recorded matmul names with ``label/`` within the block (nesting
+    joins with ``/``).  Lets a composite trace — e.g. the streaming pipeline's
+    packet + flow engines — keep its sub-models distinguishable inside one
+    :class:`repro.runtime.plan.RoutePlan`."""
+    outer = _name_scope.get()
+    token = _name_scope.set(f"{outer}{label}/")
+    try:
+        yield
+    finally:
+        _name_scope.reset(token)
 
 
 def systolic_utilization(m: int, k: int, n: int, array: int) -> float:
@@ -99,5 +114,7 @@ def route_matmul(m: int, k: int, n: int, *, config: Optional[RuntimeConfig] = No
         route = Route("arype", util, f"util {util:.3f}")
     records = _recorder.get()
     if records is not None:
-        records.append(RouteRecord(name, m, k, n, route))
+        scope = _name_scope.get()
+        scoped = f"{scope}{name}" if name is not None else (scope or None)
+        records.append(RouteRecord(scoped, m, k, n, route))
     return route

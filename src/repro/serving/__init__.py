@@ -1,2 +1,14 @@
 from repro.serving.engine import ServeEngine, ServeConfig, Request
-from repro.serving.packet_path import PacketPath, FlowPath
+from repro.serving.packet_path import (
+    FlowEngine,
+    FlowPath,
+    PacketEngine,
+    PacketPath,
+    PathStats,
+)
+from repro.serving.pipeline import (
+    OctopusPipeline,
+    PipelineConfig,
+    PipelineStats,
+    PipelineStepOutput,
+)

@@ -9,9 +9,15 @@
 
 Both wrap the end-to-end loop: feature extraction -> DL inference -> decision
 (rule-table update), i.e. the paper's working procedure steps 1 -> 6.
+
+The model-invoke cores live in :class:`PacketEngine` / :class:`FlowEngine`:
+pure ``fn(params, x)`` callables (config captured at construction) that the
+standalone paths jit individually and that the streaming
+:class:`repro.serving.pipeline.OctopusPipeline` composes into one fused step.
 """
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass
 from typing import Any, Optional
@@ -26,6 +32,8 @@ from repro.core.flow_tracker import PacketBatch
 from repro.models import paper_models
 from repro.runtime import RoutePlan, RuntimeConfig, resolve_config
 
+FLOW_MODELS = ("cnn", "transformer")
+
 
 @dataclass
 class PathStats:
@@ -35,90 +43,169 @@ class PathStats:
 
     @property
     def latency_us(self) -> float:
-        return self.total_s / max(self.calls, 1) * 1e6
+        """Mean wall time per call; ``nan`` until something was processed
+        (0.0 would read as an impossibly fast path)."""
+        if self.calls == 0:
+            return math.nan
+        return self.total_s / self.calls * 1e6
 
     @property
     def throughput(self) -> float:
+        """Items/sec; 0.0 until something was processed."""
+        if self.items == 0:
+            return 0.0
         return self.items / max(self.total_s, 1e-12)
 
+    def record(self, dt_s: float, items: int) -> None:
+        """Fold one timed call in.  Empty calls are dropped — a zero-item
+        submit must not skew per-call latency or throughput."""
+        if items == 0:
+            return
+        self.calls += 1
+        self.total_s += dt_s
+        self.items += items
 
-class PacketPath:
-    """Use-case 1: per-packet MLP intrusion detection.
+
+class PacketEngine:
+    """Model-invoke core of the packet path (use-case 1 MLP).
 
     The runtime config is captured at construction (``config=`` or the then-
-    ambient runtime) and baked into the jit'd callable — jit caches by shapes,
-    not by ambient context, so later context changes must not retune it."""
+    ambient runtime) and baked into every trace of :meth:`fn` — jit caches by
+    shapes, not by ambient context, so later context changes must not retune
+    an already-compiled consumer."""
+
+    feature_dim = 6  # packet_meta_features output width
 
     def __init__(self, params: Any, *, config: Optional[RuntimeConfig] = None):
         self.params = params
         self.runtime = resolve_config(config)
-        self.rules = decisions.RuleTable()
-        self._infer = jax.jit(
-            lambda p, x: decisions.decide_binary(
-                paper_models.mlp_apply(p, x, config=self.runtime))
-        )
-        self.stats = PathStats()
+
+    def fn(self, params: Any, x: jax.Array) -> jax.Array:
+        """Pure logits core — trace/jit/compose freely."""
+        return paper_models.mlp_apply(params, x, config=self.runtime)
+
+    def decide(self, params: Any, x: jax.Array) -> jax.Array:
+        """logits -> binary intrusion actions (0 allow / 1 deny)."""
+        return decisions.decide_binary(self.fn(params, x))
+
+    def abstract_input(self, batch: int) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct((batch, self.feature_dim), jnp.float32)
 
     def route_plan(self, batch: int = 1) -> RoutePlan:
         """Placement report for a batch of this size (no FLOPs executed)."""
-        return RoutePlan.trace(
-            lambda x: paper_models.mlp_apply(self.params, x, config=self.runtime),
-            jax.ShapeDtypeStruct((batch, 6), jnp.float32), config=self.runtime)
-
-    def warmup(self, batch: int = 1):
-        x = jnp.zeros((batch, 6), jnp.float32)
-        jax.block_until_ready(self._infer(self.params, x))
-
-    def process(self, packets: PacketBatch) -> np.ndarray:
-        feats = packet_meta_features(packets)
-        t0 = time.perf_counter()
-        out = jax.block_until_ready(self._infer(self.params, feats))
-        dt = time.perf_counter() - t0
-        self.stats.calls += 1
-        self.stats.total_s += dt
-        self.stats.items += feats.shape[0]
-        actions = np.asarray(out)
-        self.rules.update(np.asarray(packets.tuple_hash), actions)
-        return actions
+        return RoutePlan.trace(lambda x: self.fn(self.params, x),
+                               self.abstract_input(batch), config=self.runtime)
 
 
-class FlowPath:
-    """Use-cases 2/3: flow-granularity classification over ready flows."""
+class FlowEngine:
+    """Model-invoke core of the flow path (use-case 2 CNN on interval series,
+    use-case 3 transformer on payload matrices)."""
 
     def __init__(self, params: Any, model: str = "cnn", *,
                  config: Optional[RuntimeConfig] = None):
+        if model not in FLOW_MODELS:
+            raise ValueError(f"model must be one of {FLOW_MODELS}, got {model!r}")
         self.params = params
         self.model = model
         self.runtime = resolve_config(config)
-        self.rules = decisions.RuleTable()
-        if model == "cnn":
-            self._fn = lambda p, x: paper_models.cnn_apply(p, x, config=self.runtime)
-        else:
-            self._fn = lambda p, x: paper_models.transformer_apply(p, x, config=self.runtime)
-        self._infer = jax.jit(self._fn)
-        self.stats = PathStats()
+        self._apply = (paper_models.cnn_apply if model == "cnn"
+                       else paper_models.transformer_apply)
 
-    def _abstract_input(self, flows: int) -> jax.ShapeDtypeStruct:
+    def fn(self, params: Any, x: jax.Array) -> jax.Array:
+        """Pure logits core — trace/jit/compose freely."""
+        return self._apply(params, x, config=self.runtime)
+
+    def prep(self, series: jax.Array, payload: jax.Array) -> jax.Array:
+        """Tracker memories -> model input: log1p interval series for the CNN,
+        normalized payload bytes for the transformer."""
+        if self.model == "cnn":
+            return jnp.log1p(series.astype(jnp.float32))
+        return payload.astype(jnp.float32) / 255.0
+
+    def abstract_input(self, flows: int) -> jax.ShapeDtypeStruct:
         shape = ((flows, paper_models.CNN_SEQ) if self.model == "cnn"
                  else (flows, paper_models.TF_PKTS, paper_models.TF_BYTES))
         return jax.ShapeDtypeStruct(shape, jnp.float32)
 
     def route_plan(self, flows: int) -> RoutePlan:
         """Placement report for this many flows (no FLOPs executed)."""
-        return RoutePlan.trace(lambda x: self._fn(self.params, x),
-                               self._abstract_input(flows), config=self.runtime)
+        return RoutePlan.trace(lambda x: self.fn(self.params, x),
+                               self.abstract_input(flows), config=self.runtime)
+
+
+class PacketPath:
+    """Use-case 1: per-packet MLP intrusion detection (standalone wrapper
+    around :class:`PacketEngine` + stats + rule table)."""
+
+    def __init__(self, params: Any, *, config: Optional[RuntimeConfig] = None):
+        self.engine = PacketEngine(params, config=config)
+        self.rules = decisions.RuleTable()
+        self._infer = jax.jit(self.engine.decide)
+        self.stats = PathStats()
+
+    @property
+    def params(self) -> Any:
+        return self.engine.params
+
+    @property
+    def runtime(self) -> RuntimeConfig:
+        return self.engine.runtime
+
+    def route_plan(self, batch: int = 1) -> RoutePlan:
+        return self.engine.route_plan(batch)
+
+    def warmup(self, batch: int = 1):
+        x = jnp.zeros((batch, self.engine.feature_dim), jnp.float32)
+        jax.block_until_ready(self._infer(self.params, x))
+
+    def process(self, packets: PacketBatch) -> np.ndarray:
+        feats = packet_meta_features(packets)
+        if feats.shape[0] == 0:  # empty submit: no inference, no stats skew
+            return np.zeros((0,), np.int32)
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(self._infer(self.params, feats))
+        self.stats.record(time.perf_counter() - t0, feats.shape[0])
+        actions = np.asarray(out)
+        self.rules.update(np.asarray(packets.tuple_hash), actions)
+        return actions
+
+
+class FlowPath:
+    """Use-cases 2/3: flow-granularity classification over ready flows
+    (standalone wrapper around :class:`FlowEngine` + stats + rule table)."""
+
+    def __init__(self, params: Any, model: str = "cnn", *,
+                 config: Optional[RuntimeConfig] = None):
+        self.engine = FlowEngine(params, model, config=config)
+        self.rules = decisions.RuleTable()
+        self._infer = jax.jit(self.engine.fn)
+        self.stats = PathStats()
+
+    @property
+    def params(self) -> Any:
+        return self.engine.params
+
+    @property
+    def model(self) -> str:
+        return self.engine.model
+
+    @property
+    def runtime(self) -> RuntimeConfig:
+        return self.engine.runtime
+
+    def route_plan(self, flows: int) -> RoutePlan:
+        return self.engine.route_plan(flows)
 
     def warmup(self, flows: int):
-        x = jnp.zeros(self._abstract_input(flows).shape, jnp.float32)
+        x = jnp.zeros(self.engine.abstract_input(flows).shape, jnp.float32)
         jax.block_until_ready(self._infer(self.params, x))
 
     def process(self, flow_inputs: jax.Array, flow_ids: np.ndarray) -> np.ndarray:
+        if flow_inputs.shape[0] == 0:  # empty submit: no inference, no stats skew
+            return np.zeros((0,), np.int32)
         t0 = time.perf_counter()
         logits = jax.block_until_ready(self._infer(self.params, flow_inputs))
-        dt = time.perf_counter() - t0
-        self.stats.calls += 1
-        self.stats.total_s += dt
-        self.stats.items += flow_inputs.shape[0]
+        self.stats.record(time.perf_counter() - t0, flow_inputs.shape[0])
         actions, cls = decisions.decide_class(logits)
         self.rules.update(flow_ids, np.asarray(actions), np.asarray(cls))
         return np.asarray(cls)

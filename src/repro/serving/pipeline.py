@@ -1,0 +1,263 @@
+"""The streaming in-network serving pipeline (paper §2.3 working procedure).
+
+One continuous loop over packet microbatches — the paper's steps 1 -> 6 —
+instead of the isolated per-call paths:
+
+  1. parse        — ingest a :class:`PacketBatch` microbatch (the parser's
+                    struct-of-arrays output; see ``repro.data.traffic``)
+  2. track        — fold the batch into the hash-indexed flow table
+                    (:func:`flow_tracker.process_packets`, order-exact scan)
+  3. extract      — drain up to ``max_ready`` ready flows (count >= top_n)
+                    from the table and recycle their slots
+                    (:func:`flow_tracker.drain_ready`)
+  4. infer        — per-packet metadata -> :class:`PacketEngine` (latency/VPE
+                    side); emitted flow memories -> :class:`FlowEngine`
+                    (throughput/AryPE side), both under the one runtime
+                    config captured at construction
+  5. decide       — logits -> allow/deny + class ids
+  6. feed back    — decisions update the switch-facing rule table
+
+Steps 2-5 compile into a single jit'd step function whose
+:class:`TrackerState` is donated — state flows across microbatches without
+copies, and after warmup no step retraces (asserted in tests via the
+pipeline's ``trace_count``).  All output shapes are static (``batch_size``
+packets, ``max_ready`` flow rows + validity mask), so the step is scan-
+friendly by construction.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass
+from typing import Any, Iterable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import decisions
+from repro.core import flow_tracker as ft
+from repro.core.feature_extractor import packet_meta_features
+from repro.kernels.flow_features.ops import default_program
+from repro.models import paper_models
+from repro.runtime import RoutePlan, RuntimeConfig, name_scope, resolve_config
+from repro.serving.packet_path import FLOW_MODELS, FlowEngine, PacketEngine
+
+
+@dataclass(frozen=True)
+class PipelineConfig:
+    """Static shapes + thresholds of the streaming loop (jit cache keys)."""
+
+    batch_size: int = 32  # packets per microbatch (step granularity)
+    max_ready: int = 8  # ready-flow rows drained per step
+    flow_model: str = "cnn"  # "cnn" | "transformer"
+    table_size: int = 1024  # flow-state table depth (paper: 8192)
+    top_n: int = paper_models.CNN_SEQ  # ready threshold / series depth
+    top_k: int = paper_models.TF_PKTS  # payload rows per flow
+    pay_bytes: int = paper_models.TF_BYTES  # payload bytes per packet
+
+    def __post_init__(self):
+        if self.flow_model not in FLOW_MODELS:
+            raise ValueError(f"flow_model must be one of {FLOW_MODELS}, "
+                             f"got {self.flow_model!r}")
+        if self.batch_size <= 0 or not 0 < self.max_ready <= self.table_size:
+            raise ValueError("batch_size and max_ready must be positive "
+                             "(max_ready <= table_size)")
+        # the flow engine consumes the tracker memories directly — their
+        # depths must match the model's fixed input geometry
+        if self.flow_model == "cnn" and self.top_n != paper_models.CNN_SEQ:
+            raise ValueError(f"cnn flow model needs top_n == {paper_models.CNN_SEQ} "
+                             f"(got {self.top_n})")
+        if self.flow_model == "transformer" and (
+                self.top_k != paper_models.TF_PKTS
+                or self.pay_bytes != paper_models.TF_BYTES):
+            raise ValueError(
+                f"transformer flow model needs top_k == {paper_models.TF_PKTS} and "
+                f"pay_bytes == {paper_models.TF_BYTES} "
+                f"(got {self.top_k}/{self.pay_bytes})")
+
+
+class PipelineStepOutput(NamedTuple):
+    """Device-side outputs of one fused step (static shapes)."""
+
+    pkt_actions: jax.Array  # (batch_size,) int32 0 allow / 1 deny
+    drained: ft.DrainResult  # max_ready rows + mask
+    flow_actions: jax.Array  # (max_ready,) int32
+    flow_cls: jax.Array  # (max_ready,) int32
+    new_flows: jax.Array  # () int32 — flows established this step
+    evicted: jax.Array  # () int32 — stale flows recycled by collision
+
+
+@dataclass
+class PipelineStats:
+    """Sustained-loop counters (wall time covers the fused device step)."""
+
+    steps: int = 0
+    total_s: float = 0.0
+    packets: int = 0
+    flows: int = 0  # ready flows emitted + classified
+    new_flows: int = 0
+    evicted: int = 0
+
+    @property
+    def pkt_per_s(self) -> float:
+        return self.packets / self.total_s if self.total_s > 0 else 0.0
+
+    @property
+    def flow_per_s(self) -> float:
+        return self.flows / self.total_s if self.total_s > 0 else 0.0
+
+    @property
+    def step_us(self) -> float:
+        return self.total_s / self.steps * 1e6 if self.steps else float("nan")
+
+
+class OctopusPipeline:
+    """Streaming serving loop composing the tracker and both inference
+    engines under one :class:`RuntimeConfig` (captured at construction, like
+    the standalone paths — jit caches by shapes, not ambient context).
+
+    ``run(traffic, steps=N)`` sustains :class:`TrackerState` across
+    microbatches; the state argument is donated to the jit'd step, so the
+    table updates in place instead of round-tripping fresh buffers."""
+
+    def __init__(self, packet_params: Any, flow_params: Any,
+                 cfg: PipelineConfig = PipelineConfig(), *,
+                 config: Optional[RuntimeConfig] = None,
+                 program: Optional[jax.Array] = None):
+        self.cfg = cfg
+        self.runtime = resolve_config(config)
+        self.packet_engine = PacketEngine(packet_params, config=self.runtime)
+        self.flow_engine = FlowEngine(flow_params, cfg.flow_model,
+                                      config=self.runtime)
+        self.program = program if program is not None else default_program()
+        self.rules = decisions.RuleTable()  # the switch-facing table (step 6)
+        self.stats = PipelineStats()
+        self.state = ft.init_state(cfg.table_size, cfg.top_n, cfg.top_k,
+                                   cfg.pay_bytes)
+        self.trace_count = 0  # bumps only when _step re-traces
+        self._step_fn = jax.jit(self._step, donate_argnums=(0,))
+
+    # ------------------------------------------------------------ traced core
+    def _step(self, state: ft.TrackerState,
+              packets: ft.PacketBatch) -> tuple[ft.TrackerState, PipelineStepOutput]:
+        """Steps 2-5 as one traced function (state donated under jit)."""
+        self.trace_count += 1  # python side effect: runs per trace, not per call
+        state, outs = ft.process_packets(state, packets, self.program,
+                                         top_n=self.cfg.top_n)
+        state, drained = ft.drain_ready(state, top_n=self.cfg.top_n,
+                                        max_ready=self.cfg.max_ready)
+        pkt_logits = self.packet_engine.fn(self.packet_engine.params,
+                                           packet_meta_features(packets))
+        flow_x = self.flow_engine.prep(drained.series, drained.payload)
+        flow_logits = self.flow_engine.fn(self.flow_engine.params, flow_x)
+        flow_actions, flow_cls = decisions.decide_class(flow_logits)
+        return state, PipelineStepOutput(
+            pkt_actions=decisions.decide_binary(pkt_logits),
+            drained=drained,
+            flow_actions=flow_actions,
+            flow_cls=flow_cls,
+            new_flows=outs.new_flow.sum().astype(jnp.int32),
+            evicted=outs.evicted.sum().astype(jnp.int32),
+        )
+
+    # -------------------------------------------------------------- host loop
+    def warmup(self) -> None:
+        """Compile the step for the canonical shapes on a throwaway state
+        (the live table is untouched)."""
+        scratch = ft.init_state(self.cfg.table_size, self.cfg.top_n,
+                                self.cfg.top_k, self.cfg.pay_bytes)
+        _, out = self._step_fn(scratch, self._zero_batch())
+        jax.block_until_ready(out)
+
+    def _zero_batch(self) -> ft.PacketBatch:
+        p, c = self.cfg.batch_size, self.cfg
+        return ft.PacketBatch(
+            ts=jnp.zeros((p,), jnp.int32), size=jnp.zeros((p,), jnp.int32),
+            dir=jnp.zeros((p,), jnp.int32), flags=jnp.zeros((p,), jnp.int32),
+            proto=jnp.zeros((p,), jnp.int32),
+            tuple_hash=jnp.zeros((p,), jnp.int32),
+            payload=jnp.zeros((p, c.pay_bytes), jnp.int32))
+
+    def step(self, packets: ft.PacketBatch) -> PipelineStepOutput:
+        """Run one microbatch through the loop and fold the decisions into
+        the rule table.  ``packets`` must have ``batch_size`` rows (static
+        shape — a different size would recompile)."""
+        n = int(packets.ts.shape[0])
+        if n != self.cfg.batch_size:
+            raise ValueError(f"microbatch must have batch_size="
+                             f"{self.cfg.batch_size} packets, got {n}")
+        t0 = time.perf_counter()
+        self.state, out = self._step_fn(self.state, packets)
+        jax.block_until_ready((self.state, out))
+        dt = time.perf_counter() - t0
+
+        # step 6: decisions feed back into the switch-facing rule table
+        self.rules.update(np.asarray(packets.tuple_hash),
+                          np.asarray(out.pkt_actions))
+        mask = np.asarray(out.drained.mask)
+        n_flows = int(mask.sum())
+        if n_flows:
+            self.rules.update(np.asarray(out.drained.tuple_id)[mask],
+                              np.asarray(out.flow_actions)[mask],
+                              np.asarray(out.flow_cls)[mask])
+
+        s = self.stats
+        s.steps += 1
+        s.total_s += dt
+        s.packets += n
+        s.flows += n_flows
+        s.new_flows += int(out.new_flows)
+        s.evicted += int(out.evicted)
+        return out
+
+    def run(self, traffic: Iterable[ft.PacketBatch],
+            steps: Optional[int] = None) -> PipelineStats:
+        """Drive the loop from an iterable of microbatches (e.g. a
+        :class:`repro.data.traffic.TrafficGenerator`, which streams forever —
+        pass ``steps`` to bound it) and return the sustained stats."""
+        # islice, not enumerate+break: never pull a batch beyond `steps` (a
+        # generator reused across run() calls must not silently drop one)
+        for batch in itertools.islice(iter(traffic), steps):
+            self.step(batch)
+        return self.stats
+
+    def reset(self) -> None:
+        """Fresh table, rule set and counters (compiled step is kept)."""
+        self.state = ft.init_state(self.cfg.table_size, self.cfg.top_n,
+                                   self.cfg.top_k, self.cfg.pay_bytes)
+        self.rules = decisions.RuleTable()
+        self.stats = PipelineStats()
+
+    # ------------------------------------------------------------- placement
+    def plan(self) -> RoutePlan:
+        """One RoutePlan over both engines' matmuls, in step order (packet
+        engine under the ``pkt/`` name scope, then the flow engine under
+        ``flow/``) — the single placement truth for the fused step."""
+        def both(px: jax.Array, fx: jax.Array):
+            with name_scope("pkt"):
+                a = self.packet_engine.fn(self.packet_engine.params, px)
+            with name_scope("flow"):
+                b = self.flow_engine.fn(self.flow_engine.params, fx)
+            return a, b
+
+        return RoutePlan.trace(
+            both, self.packet_engine.abstract_input(self.cfg.batch_size),
+            self.flow_engine.abstract_input(self.cfg.max_ready),
+            config=self.runtime)
+
+    def explain(self) -> str:
+        """Placement report for the fused step: the combined plan plus the
+        per-engine split."""
+        plan = self.plan()
+        pkt, flow = plan.scoped("pkt"), plan.scoped("flow")
+        c = self.cfg
+        head = (f"OctopusPipeline: batch={c.batch_size} max_ready={c.max_ready} "
+                f"flow_model={c.flow_model} table={c.table_size} top_n={c.top_n}")
+        fmt = lambda p: ", ".join(f"{s.name.split('/', 1)[1]}->{s.engine}"
+                                  for s in p.steps)
+        return "\n".join([
+            head, plan.explain(),
+            f"  packet-engine ({len(pkt)} matmuls): {fmt(pkt)}",
+            f"  flow-engine ({len(flow)} matmuls): {fmt(flow)}",
+        ])

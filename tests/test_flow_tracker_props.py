@@ -1,0 +1,189 @@
+"""Property-based tests for the flow tracker (establish/update/evict/ready/
+drain semantics under random packet streams).
+
+The invariant checker is plain code shared by two entry points: a
+hypothesis-driven property test (random seeds/shapes, skipped gracefully when
+hypothesis is absent — see tests/hypothesis_compat.py) and a deterministic
+seeded sweep that always runs, so the invariants stay exercised even without
+the dev extra installed.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core import flow_tracker as ft
+from repro.kernels.flow_features.ops import HIST, default_program
+
+
+def single_packet(h: int, ts: int, size: int, *, dir_: int = 0, flags: int = 0,
+                  proto: int = 0, pay_bytes: int = 4) -> ft.PacketBatch:
+    return ft.PacketBatch(
+        ts=jnp.asarray([ts], jnp.int32), size=jnp.asarray([size], jnp.int32),
+        dir=jnp.asarray([dir_], jnp.int32), flags=jnp.asarray([flags], jnp.int32),
+        proto=jnp.asarray([proto], jnp.int32),
+        tuple_hash=jnp.asarray([h], jnp.int32),
+        payload=jnp.zeros((1, pay_bytes), jnp.int32))
+
+
+def check_stream_invariants(seed: int, n_pkts: int, table_size: int,
+                            top_n: int, hash_pool: list, *,
+                            max_ready: int = 2, drain_every: int = 7) -> int:
+    """Feed a random packet stream one packet at a time and assert, at every
+    step:
+      * ``count`` is monotone (+1) for a live flow; 1 on establishment
+      * an eviction frees exactly the colliding slot — every other slot's
+        state is bit-identical before/after
+      * the min lanes never exceed the observed minima of the live flow
+      * drained (emitted) flows always carry ``count >= top_n``
+    Returns the number of emitted flows (so callers can assert coverage)."""
+    rng = np.random.default_rng(seed)
+    program = default_program()
+    state = ft.init_state(table_size, top_n, top_k=3, pay_bytes=4)
+    observed: dict[int, dict] = {}  # slot -> {"tuple", "sizes", "intvs", "count", "last_ts"}
+    clock = 0
+    emitted = 0
+
+    for i in range(n_pkts):
+        h = int(rng.choice(hash_pool))
+        clock += int(rng.integers(1, 50))
+        size = int(rng.integers(40, 1500))
+        pkt = single_packet(h, clock, size)
+        prev = [np.asarray(a).copy() for a in state]
+        prev_count = prev[1]
+        prev_tuple = prev[0]
+
+        state, out = ft.process_packets(state, pkt, program, top_n=top_n)
+        slot = int(out.slot[0])
+        new = bool(out.new_flow[0])
+        ev = bool(out.evicted[0])
+
+        # --- count monotone per live flow / establishment semantics
+        if new:
+            assert int(state.count[slot]) == 1
+            if ev:  # eviction only ever hits an occupied slot of another flow
+                assert prev_count[slot] > 0 and prev_tuple[slot] != h
+            else:
+                assert prev_count[slot] == 0
+            flow = observed[slot] = {"tuple": h, "sizes": [], "intvs": [],
+                                     "count": 0, "last_ts": None}
+        else:
+            assert not ev
+            assert int(state.count[slot]) == prev_count[slot] + 1  # monotone
+            flow = observed[slot]
+            assert flow["tuple"] == h
+        intv = clock - flow["last_ts"] if flow["last_ts"] is not None else 0
+        flow["sizes"].append(size)
+        flow["intvs"].append(intv)
+        flow["count"] += 1
+        flow["last_ts"] = clock
+
+        # --- a packet touches exactly its slot (eviction frees only it)
+        for arr_prev, arr_now in zip(prev, state):
+            now = np.asarray(arr_now)
+            keep = np.ones(table_size, bool)
+            keep[slot] = False
+            np.testing.assert_array_equal(arr_prev[keep], now[keep])
+
+        # --- min lanes never exceed the observed minima of the live flow
+        feats = np.asarray(state.features[slot])
+        assert feats[HIST["min_size"]] <= min(flow["sizes"])
+        assert feats[HIST["min_intv"]] <= min(flow["intvs"])
+        # (and for this program they are exactly the observed minima)
+        assert feats[HIST["min_size"]] == min(flow["sizes"])
+        assert feats[HIST["min_intv"]] == min(flow["intvs"])
+        assert feats[HIST["pkt_count"]] == flow["count"]
+
+        # --- periodic drain: emissions always crossed the top-n threshold
+        if i % drain_every == drain_every - 1:
+            n_ready_before = int(np.asarray(ft.ready_mask(state, top_n=top_n)).sum())
+            state, drained = ft.drain_ready(state, top_n=top_n,
+                                            max_ready=max_ready)
+            mask = np.asarray(drained.mask)
+            assert int(mask.sum()) == min(n_ready_before, max_ready)
+            for r in np.flatnonzero(mask):
+                assert int(drained.count[r]) >= top_n
+                s = int(drained.slots[r])
+                assert int(drained.tuple_id[r]) == observed[s]["tuple"]
+                assert int(state.count[s]) == 0  # slot recycled
+                del observed[s]
+                emitted += 1
+            # overflow flows (beyond max_ready) stay ready for the next drain
+            still = int(np.asarray(ft.ready_mask(state, top_n=top_n)).sum())
+            assert still == max(0, n_ready_before - max_ready)
+    return emitted
+
+
+# -------------------------------------------------- deterministic (always on)
+
+@pytest.mark.parametrize("seed", range(4))
+def test_tracker_stream_invariants_seeded(seed):
+    check_stream_invariants(seed, n_pkts=30, table_size=8, top_n=3,
+                            hash_pool=list(range(1, 10)))
+
+
+def test_tracker_stream_emits_flows():
+    # a single hot flow must cross the threshold and actually be emitted
+    emitted = check_stream_invariants(1, n_pkts=30, table_size=4, top_n=2,
+                                      hash_pool=[5], drain_every=3)
+    assert emitted > 0
+
+
+def test_drain_ready_respects_max_ready_and_order():
+    state = ft.init_state(16, 3, 2, 4)
+    # hand-mark 5 ready flows on slots 1,4,7,9,12
+    ready_slots = [1, 4, 7, 9, 12]
+    counts = np.zeros(16, np.int32)
+    tuples = np.zeros(16, np.int32)
+    for s in ready_slots:
+        counts[s], tuples[s] = 3 + s, 100 + s
+    state = state._replace(count=jnp.asarray(counts), tuple_id=jnp.asarray(tuples))
+
+    state, d = ft.drain_ready(state, top_n=3, max_ready=3)
+    assert np.asarray(d.mask).tolist() == [True] * 3
+    assert np.asarray(d.slots).tolist() == [1, 4, 7]  # lowest slots first
+    assert np.asarray(d.tuple_id).tolist() == [101, 104, 107]
+    # remaining two stay ready and drain next call (padding rows after)
+    state, d2 = ft.drain_ready(state, top_n=3, max_ready=3)
+    assert np.asarray(d2.mask).tolist() == [True, True, False]
+    assert np.asarray(d2.slots).tolist()[:2] == [9, 12]
+    assert int(np.asarray(ft.ready_mask(state, top_n=3)).sum()) == 0
+
+
+def test_hash_slot_scalar_matches_array_version():
+    """The host-side scalar hash (traffic generator collision avoidance) must
+    stay bit-identical to the device hash the tracker uses."""
+    rng = np.random.default_rng(0)
+    hashes = rng.integers(1, 2**31 - 1, 200).astype(np.int32)
+    for table in (4, 64, 1024, 8192):
+        ref = np.asarray(ft.hash_slot(jnp.asarray(hashes), table))
+        got = [ft.hash_slot_scalar(int(h), table) for h in hashes]
+        np.testing.assert_array_equal(ref, got)
+
+
+def test_drain_ready_validates_max_ready():
+    state = ft.init_state(8, 2, 2, 4)
+    with pytest.raises(ValueError):
+        ft.drain_ready(state, top_n=2, max_ready=0)
+    with pytest.raises(ValueError):
+        ft.drain_ready(state, top_n=2, max_ready=9)
+
+
+# ------------------------------------------------------- hypothesis (CI)
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), n_pkts=st.integers(1, 30),
+       table_size=st.sampled_from([4, 8, 16]), top_n=st.integers(2, 5))
+def test_tracker_stream_invariants_property(seed, n_pkts, table_size, top_n):
+    check_stream_invariants(seed, n_pkts, table_size, top_n,
+                            hash_pool=list(range(1, 12)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), max_ready=st.integers(1, 4),
+       drain_every=st.integers(2, 9))
+def test_tracker_drain_property(seed, max_ready, drain_every):
+    # heavy collisions (pool of 4 hashes, table of 4): constant evict/re-establish
+    check_stream_invariants(seed, n_pkts=30, table_size=4, top_n=2,
+                            hash_pool=[3, 5, 8, 13], max_ready=max_ready,
+                            drain_every=drain_every)

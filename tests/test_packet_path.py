@@ -1,0 +1,111 @@
+"""Serving-path units: the engine cores the pipeline composes, the thin
+standalone wrappers, and the PathStats empty-batch regression."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import paper_models
+from repro.runtime import RuntimeConfig
+from repro.serving.packet_path import (
+    FlowEngine,
+    FlowPath,
+    PacketEngine,
+    PacketPath,
+    PathStats,
+)
+
+
+@pytest.fixture(scope="module")
+def mlp_params():
+    return paper_models.init_paper_model("mlp", jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def cnn_params():
+    return paper_models.init_paper_model("cnn", jax.random.PRNGKey(1))
+
+
+def make_packets(n: int):
+    from repro.core.flow_tracker import PacketBatch
+
+    return PacketBatch(
+        ts=jnp.arange(n, dtype=jnp.int32), size=jnp.full((n,), 100, jnp.int32),
+        dir=jnp.zeros((n,), jnp.int32), flags=jnp.zeros((n,), jnp.int32),
+        proto=jnp.zeros((n,), jnp.int32),
+        tuple_hash=jnp.arange(1, n + 1, dtype=jnp.int32),
+        payload=jnp.zeros((n, 16), jnp.int32))
+
+
+# ------------------------------------------------------------------ PathStats
+
+def test_pathstats_empty_is_explicit_nan_and_zero():
+    s = PathStats()
+    assert math.isnan(s.latency_us)  # not a fake 0.0us latency
+    assert s.throughput == 0.0
+
+
+def test_pathstats_record_drops_empty_calls():
+    s = PathStats()
+    s.record(1e-3, 10)
+    lat = s.latency_us
+    s.record(5.0, 0)  # a stray empty submit must not skew the mean
+    assert s.latency_us == lat
+    assert s.calls == 1 and s.items == 10
+
+
+def test_empty_batch_submit_does_not_skew_stats(mlp_params, cnn_params):
+    p = PacketPath(mlp_params)
+    out = p.process(make_packets(0))
+    assert out.shape == (0,)
+    assert p.stats.calls == 0 and math.isnan(p.stats.latency_us)
+    assert p.rules.generation == 0  # no rule churn either
+
+    f = FlowPath(cnn_params, model="cnn")
+    cls = f.process(jnp.zeros((0, paper_models.CNN_SEQ), jnp.float32),
+                    np.zeros((0,), np.int32))
+    assert cls.shape == (0,)
+    assert f.stats.calls == 0 and math.isnan(f.stats.latency_us)
+
+    # a real batch afterwards produces untainted per-call latency
+    p.process(make_packets(4))
+    assert p.stats.calls == 1 and p.stats.items == 4
+    assert p.stats.latency_us > 0 and p.stats.throughput > 0
+
+
+# -------------------------------------------------------------------- engines
+
+def test_engines_are_pure_cores(mlp_params, cnn_params):
+    pe = PacketEngine(mlp_params, config=RuntimeConfig(policy="vpe_only"))
+    x = jnp.ones((3, pe.feature_dim), jnp.float32)
+    logits = pe.fn(mlp_params, x)
+    assert logits.shape == (3, 2)
+    # jit-composable (this is exactly what the pipeline does)
+    np.testing.assert_allclose(np.asarray(jax.jit(pe.fn)(mlp_params, x)),
+                               np.asarray(logits), rtol=1e-6)
+
+    fe = FlowEngine(cnn_params, "cnn")
+    series = jnp.ones((2, paper_models.CNN_SEQ), jnp.int32)
+    payload = jnp.ones((2, paper_models.TF_PKTS, paper_models.TF_BYTES), jnp.int32)
+    assert fe.prep(series, payload).shape == (2, paper_models.CNN_SEQ)
+    assert fe.fn(cnn_params, fe.prep(series, payload)).shape == (2, paper_models.CNN_CLASSES)
+
+
+def test_flow_engine_rejects_unknown_model(cnn_params):
+    with pytest.raises(ValueError, match="model"):
+        FlowEngine(cnn_params, "rnn")
+
+
+def test_wrappers_share_engine_state(mlp_params, cnn_params):
+    cfg = RuntimeConfig(policy="arype_only")
+    p = PacketPath(mlp_params, config=cfg)
+    assert p.runtime is p.engine.runtime and p.runtime.policy == "arype_only"
+    assert p.params is mlp_params
+    plan = p.route_plan(batch=8)
+    assert all(s.engine == "arype" for s in plan.steps)
+
+    f = FlowPath(cnn_params, model="cnn", config=cfg)
+    assert f.model == "cnn" and f.runtime.policy == "arype_only"
+    assert len(f.route_plan(flows=10)) == 5

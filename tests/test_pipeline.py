@@ -1,0 +1,269 @@
+"""Streaming pipeline: differential test against a pure-Python oracle
+tracker, interpret-vs-compiled parity, jit cache stability (no per-step
+retrace), and the combined placement report."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import flow_tracker as ft
+from repro.data.traffic import TrafficConfig, TrafficGenerator
+from repro.models import paper_models
+from repro.serving import OctopusPipeline, PipelineConfig
+
+INT_MAX = np.iinfo(np.int32).max
+
+
+# ---------------------------------------------------------------------------
+# Pure-Python oracle tracker (independent reimplementation of the paper's
+# establish/update/evict/emit semantics — dicts and ints, no JAX)
+# ---------------------------------------------------------------------------
+
+class OracleTracker:
+    def __init__(self, table_size: int, top_n: int, top_k: int, pay_bytes: int):
+        self.table_size = table_size
+        self.top_n = top_n
+        self.top_k = top_k
+        self.pay_bytes = pay_bytes
+        self.slots: dict[int, dict] = {}
+
+    def slot_of(self, tuple_hash: int) -> int:
+        h = ((tuple_hash & 0xFFFFFFFF) * 0x9E3779B1) & 0xFFFFFFFF
+        h ^= h >> 16
+        return h % self.table_size
+
+    def _fresh(self, tuple_hash: int) -> dict:
+        return {
+            "tuple_id": tuple_hash, "count": 0, "last_ts": 0,
+            "flow_dur": 0, "flow_size": 0, "max_size": 0, "min_size": INT_MAX,
+            "max_intv": 0, "min_intv": INT_MAX, "size_fwd": 0, "size_bwd": 0,
+            "flags_acc": 0, "last_size": 0, "payload_bytes": 0, "proto": 0,
+            "series": [0] * self.top_n, "sizes": [0] * self.top_n,
+            "payload": [[0] * self.pay_bytes for _ in range(self.top_k)],
+        }
+
+    def process(self, pkt: dict) -> None:
+        slot = self.slot_of(pkt["tuple_hash"])
+        e = self.slots.get(slot)
+        if e is None or e["count"] == 0 or e["tuple_id"] != pkt["tuple_hash"]:
+            e = self._fresh(pkt["tuple_hash"])  # establish (evicts any stale flow)
+            self.slots[slot] = e
+        intv = pkt["ts"] - e["last_ts"] if e["count"] > 0 else 0
+        size = pkt["size"]
+        c0 = e["count"]
+        e["flow_dur"] += intv
+        e["flow_size"] += size
+        e["max_size"] = max(e["max_size"], size)
+        e["min_size"] = min(e["min_size"], size)
+        e["max_intv"] = max(e["max_intv"], intv)
+        e["min_intv"] = min(e["min_intv"], intv)
+        e["last_ts"] = pkt["ts"]
+        e["size_fwd"] += size if pkt["dir"] == 0 else 0
+        e["size_bwd"] += size if pkt["dir"] == 1 else 0
+        e["flags_acc"] += pkt["flags"]
+        e["last_size"] = size
+        e["payload_bytes"] += min(size, self.pay_bytes)
+        e["proto"] = pkt["proto"]
+        if c0 < self.top_n:
+            e["series"][c0] = intv
+            e["sizes"][c0] = size
+        if c0 < self.top_k:
+            e["payload"][c0] = list(pkt["payload"])
+        e["count"] = c0 + 1
+
+    def feature_word(self, e: dict) -> list:
+        return [e["flow_dur"], e["count"], e["flow_size"], e["max_size"],
+                e["min_size"], e["max_intv"], e["min_intv"], e["last_ts"],
+                e["size_fwd"], e["size_bwd"], e["flags_acc"], e["last_size"],
+                e["payload_bytes"], e["proto"], 0, 0]
+
+    def drain_ready(self, max_ready: int) -> list:
+        ready = sorted(s for s, e in self.slots.items()
+                       if e["count"] >= self.top_n)[:max_ready]
+        emitted = []
+        for s in ready:
+            e = self.slots.pop(s)
+            emitted.append({"slot": s, "tuple_id": e["tuple_id"],
+                            "count": e["count"],
+                            "features": self.feature_word(e),
+                            "series": e["series"], "sizes": e["sizes"],
+                            "payload": e["payload"]})
+        return emitted
+
+
+def batch_as_dicts(batch: ft.PacketBatch) -> list:
+    ts, size, dirs, flags, proto, thash, pay = (np.asarray(a) for a in batch)
+    return [{"ts": int(ts[i]), "size": int(size[i]), "dir": int(dirs[i]),
+             "flags": int(flags[i]), "proto": int(proto[i]),
+             "tuple_hash": int(thash[i]), "payload": pay[i].tolist()}
+            for i in range(ts.shape[0])]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return {
+        "mlp": paper_models.init_paper_model("mlp", jax.random.PRNGKey(0)),
+        "cnn": paper_models.init_paper_model("cnn", jax.random.PRNGKey(1)),
+        "transformer": paper_models.init_paper_model("transformer",
+                                                     jax.random.PRNGKey(2)),
+    }
+
+
+def test_pipeline_matches_python_oracle(params):
+    """Differential: every drained flow over seeded mice/elephant traffic must
+    equal the pure-Python oracle exactly (int32 features, series, payload)."""
+    cfg = PipelineConfig(batch_size=24, max_ready=4, flow_model="transformer",
+                         table_size=64, top_n=6, top_k=15, pay_bytes=16)
+    pipe = OctopusPipeline(params["mlp"], params["transformer"], cfg)
+    gen = TrafficGenerator(TrafficConfig(
+        batch_size=24, active_flows=16, elephant_fraction=0.5,
+        table_size=64, seed=11, burst_prob=0.3))
+    oracle = OracleTracker(64, top_n=6, top_k=15, pay_bytes=16)
+
+    total_emitted = 0
+    for _ in range(25):
+        batch = gen.next_batch()
+        for pkt in batch_as_dicts(batch):
+            oracle.process(pkt)
+        expect = oracle.drain_ready(cfg.max_ready)
+        out = pipe.step(batch)
+        d = out.drained
+        mask = np.asarray(d.mask)
+        assert int(mask.sum()) == len(expect)
+        for r, want in enumerate(expect):
+            assert int(d.slots[r]) == want["slot"]
+            assert int(d.tuple_id[r]) == want["tuple_id"]
+            assert int(d.count[r]) == want["count"]
+            np.testing.assert_array_equal(
+                np.asarray(d.features[r]), np.asarray(want["features"], np.int32))
+            np.testing.assert_array_equal(
+                np.asarray(d.series[r]), np.asarray(want["series"], np.int32))
+            np.testing.assert_array_equal(
+                np.asarray(d.sizes[r]), np.asarray(want["sizes"], np.int32))
+            np.testing.assert_array_equal(
+                np.asarray(d.payload[r]), np.asarray(want["payload"], np.int32))
+        total_emitted += len(expect)
+    assert total_emitted > 5  # the trace actually exercised the emission path
+
+    # residual table state agrees too (live flows, exact int32)
+    live = np.asarray(pipe.state.count) > 0
+    for slot in np.flatnonzero(live):
+        e = oracle.slots[int(slot)]
+        assert int(pipe.state.tuple_id[slot]) == e["tuple_id"]
+        np.testing.assert_array_equal(
+            np.asarray(pipe.state.features[slot]),
+            np.asarray(oracle.feature_word(e), np.int32))
+    assert {int(s) for s in np.flatnonzero(live)} == set(oracle.slots)
+
+
+def test_interpret_vs_compiled_step_parity(params):
+    """One pipeline step must produce identical state + outputs whether it is
+    compiled (jit) or evaluated eagerly (jax.disable_jit)."""
+    cfg = PipelineConfig(batch_size=16, max_ready=4, flow_model="transformer",
+                         table_size=32, top_n=4, top_k=15, pay_bytes=16)
+    pipe = OctopusPipeline(params["mlp"], params["transformer"], cfg)
+    batch = TrafficGenerator(TrafficConfig(
+        batch_size=16, active_flows=8, elephant_fraction=0.5, table_size=32,
+        seed=5)).next_batch()
+    state = ft.init_state(cfg.table_size, cfg.top_n, cfg.top_k, cfg.pay_bytes)
+
+    with jax.disable_jit():
+        s_eager, o_eager = pipe._step(state, batch)
+    s_jit, o_jit = jax.jit(pipe._step)(state, batch)  # fresh jit, no donation
+
+    for a, b in zip(jax.tree.leaves((s_eager, o_eager)),
+                    jax.tree.leaves((s_jit, o_jit))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_no_retrace_after_warmup_and_state_sustained(params):
+    """The jit cache must hold across microbatches (one trace total) while
+    TrackerState accumulates — a flow spread over several batches still
+    reaches the ready threshold."""
+    cfg = PipelineConfig(batch_size=4, max_ready=2, flow_model="transformer",
+                         table_size=16, top_n=8, top_k=15, pay_bytes=16)
+    pipe = OctopusPipeline(params["mlp"], params["transformer"], cfg)
+    pipe.warmup()
+    assert pipe.trace_count == 1
+
+    h = 77  # one flow, its 8 packets split across two microbatches
+    def batch(ts0):
+        return ft.PacketBatch(
+            ts=jnp.asarray([ts0 + 10 * i for i in range(4)], jnp.int32),
+            size=jnp.full((4,), 100, jnp.int32),
+            dir=jnp.zeros((4,), jnp.int32), flags=jnp.zeros((4,), jnp.int32),
+            proto=jnp.zeros((4,), jnp.int32),
+            tuple_hash=jnp.full((4,), h, jnp.int32),
+            payload=jnp.zeros((4, 16), jnp.int32))
+
+    out1 = pipe.step(batch(100))
+    assert int(np.asarray(out1.drained.mask).sum()) == 0  # 4 < top_n
+    out2 = pipe.step(batch(140))
+    mask = np.asarray(out2.drained.mask)
+    assert int(mask.sum()) == 1  # state carried: 4 + 4 == top_n
+    assert int(out2.drained.tuple_id[0]) == h
+    assert int(out2.drained.count[0]) == 8
+    # interval series crosses the batch boundary seamlessly
+    assert np.asarray(out2.drained.series[0])[:8].tolist() == [0] + [10] * 7
+    assert pipe.trace_count == 1  # cache hits only: no per-step retrace
+    assert pipe.stats.steps == 2 and pipe.stats.packets == 8 and pipe.stats.flows == 1
+
+
+def test_explain_reports_both_engines_from_one_plan(params):
+    cfg = PipelineConfig(batch_size=32, max_ready=8, flow_model="cnn",
+                         table_size=128)
+    pipe = OctopusPipeline(params["mlp"], params["cnn"], cfg)
+    plan = pipe.plan()
+    names = [s.name for s in plan.steps]
+    assert names[:4] == ["pkt/w0", "pkt/w1", "pkt/w2", "pkt/w3"]
+    assert "flow/conv1" in names and "flow/linear" in names
+    assert len(plan.scoped("pkt")) == 4 and len(plan.scoped("flow")) == 5
+    # a sub-plan keeps the shared config (single placement truth)
+    assert plan.scoped("flow").config is plan.config
+    text = pipe.explain()
+    assert "packet-engine (4 matmuls)" in text
+    assert "flow-engine (5 matmuls)" in text
+    assert "RoutePlan: 9 matmuls" in text  # one plan covers both
+
+
+def test_pipeline_run_and_reset(params):
+    cfg = PipelineConfig(batch_size=16, max_ready=4, flow_model="cnn",
+                         table_size=128)
+    pipe = OctopusPipeline(params["mlp"], params["cnn"], cfg)
+    gen = TrafficGenerator(TrafficConfig(batch_size=16, active_flows=12,
+                                         elephant_fraction=0.5, table_size=128,
+                                         seed=3))
+    stats = pipe.run(gen, steps=12)
+    assert stats.steps == 12 and stats.packets == 12 * 16
+    assert stats.flows > 0 and stats.flow_per_s > 0 and stats.pkt_per_s > 0
+    assert pipe.rules.generation > 0 and len(pipe.rules.rules) > 0
+    # rule table carries flow-class verdicts for emitted flows
+    assert any(r["class"] >= 0 for r in pipe.rules.rules.values())
+
+    pipe.reset()
+    assert pipe.stats.steps == 0 and len(pipe.rules.rules) == 0
+    assert int(np.asarray(pipe.state.count).sum()) == 0
+    assert pipe.trace_count == 1  # reset keeps the compiled step
+
+
+def test_pipeline_config_validation():
+    with pytest.raises(ValueError):
+        PipelineConfig(flow_model="rnn")
+    with pytest.raises(ValueError):
+        PipelineConfig(flow_model="cnn", top_n=7)  # cnn needs CNN_SEQ
+    with pytest.raises(ValueError):
+        PipelineConfig(flow_model="transformer", top_k=3)
+    with pytest.raises(ValueError):
+        PipelineConfig(max_ready=0)
+    # transformer frees top_n from the CNN's sequence length
+    assert PipelineConfig(flow_model="transformer", top_n=4).top_n == 4
+
+
+def test_step_rejects_wrong_batch_size(params):
+    cfg = PipelineConfig(batch_size=8, max_ready=2, flow_model="cnn",
+                         table_size=64)
+    pipe = OctopusPipeline(params["mlp"], params["cnn"], cfg)
+    small = TrafficGenerator(TrafficConfig(batch_size=4, table_size=64,
+                                           active_flows=4)).next_batch()
+    with pytest.raises(ValueError, match="batch_size"):
+        pipe.step(small)

@@ -250,3 +250,32 @@ def test_jit_traces_under_construction_config():
     with octopus_runtime(RuntimeConfig(policy="vpe_only")):
         assert path.route_plan(8).engines() == {
             "w0": "arype", "w1": "arype", "w2": "arype", "w3": "arype"}
+
+
+def test_name_scope_prefixes_recorded_routes():
+    """name_scope labels composite traces; RoutePlan.scoped extracts the
+    sub-plan (how the streaming pipeline splits packet vs flow engines)."""
+    from repro.runtime import name_scope, record_routes, route_matmul
+
+    with record_routes() as records:
+        route_matmul(8, 8, 8, name="plain")
+        with name_scope("pkt"):
+            route_matmul(8, 8, 8, name="w0")
+            with name_scope("inner"):
+                route_matmul(8, 8, 8, name="w1")
+            route_matmul(8, 8, 8)  # unnamed: bare scope label
+        route_matmul(8, 8, 8, name="after")
+    assert [r.name for r in records] == [
+        "plain", "pkt/w0", "pkt/inner/w1", "pkt/", "after"]
+
+    mlp = paper_models.init_paper_model("mlp", jax.random.PRNGKey(0))
+
+    def scoped_fn(x):
+        with name_scope("pkt"):
+            return paper_models.mlp_apply(mlp, x, config=current_runtime())
+
+    plan = RoutePlan.trace(scoped_fn, jax.ShapeDtypeStruct((8, 6), jnp.float32))
+    sub = plan.scoped("pkt")
+    assert len(sub) == 4 and [s.name for s in sub] == [
+        "pkt/w0", "pkt/w1", "pkt/w2", "pkt/w3"]
+    assert plan.scoped("missing").layers() == []

@@ -56,3 +56,72 @@ def test_engine_more_requests_than_slots(setup):
     done = eng.run_until_drained()
     assert len(done) == 5
     assert all(len(r.out_tokens) == 4 for r in reqs)
+
+
+def test_engine_single_slot_exhaustion_queues_and_matches(setup):
+    """batch_slots=1 with several queued requests: every request waits its
+    turn and still decodes exactly the single-request reference."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab_size, 5 + i) for i in range(3)]
+    refs = [reference_greedy(model, params, jnp.asarray(p, jnp.int32), 5)
+            for p in prompts]
+    eng = ServeEngine(cfg, params, ServeConfig(batch_slots=1, cache_len=96))
+    reqs = [Request(rid=i, prompt=p, max_new=5) for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    assert len(eng.queue) == 3  # all queued, single slot
+    done = eng.run_until_drained()
+    assert len(done) == 3 and not eng.queue and not eng.active.any()
+    for r, ref in zip(reqs, refs):
+        assert r.out_tokens == ref, (r.rid, r.out_tokens, ref)
+
+
+def test_engine_eos_early_stop(setup):
+    """A request whose decode emits eos_id stops early — fewer than max_new
+    tokens, the slot frees, and a queued request takes it over."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, 6)
+    ref = reference_greedy(model, params, jnp.asarray(prompt, jnp.int32), 8)
+    eos = ref[2]  # first decode-loop emission we stop on (prefill token is ref[0])
+    stop_at = ref.index(eos, 1) + 1
+
+    eng = ServeEngine(cfg, params,
+                      ServeConfig(batch_slots=1, cache_len=96, eos_id=eos))
+    early = Request(rid=0, prompt=prompt, max_new=8)
+    follower = Request(rid=1, prompt=rng.integers(0, cfg.vocab_size, 4), max_new=3)
+    eng.submit(early)
+    eng.submit(follower)
+    done = eng.run_until_drained()
+    assert len(done) == 2
+    assert early.done and early.out_tokens == ref[:stop_at]
+    assert len(early.out_tokens) < 8  # genuinely early
+    assert early.out_tokens[-1] == eos
+    assert follower.done and len(follower.out_tokens) == 3
+
+
+def test_engine_reset_reuse(setup):
+    """reset() returns the engine to a clean state: same prompts reproduce
+    the same tokens, no slot/cache leakage from the first run."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab_size, 6) for _ in range(3)]
+
+    eng = ServeEngine(cfg, params, ServeConfig(batch_slots=2, cache_len=64))
+    reqs1 = [Request(rid=i, prompt=p, max_new=4) for i, p in enumerate(prompts)]
+    for r in reqs1:
+        eng.submit(r)
+    eng.run_until_drained()
+
+    eng.reset()
+    assert eng.queue == [] and eng.slots == [None, None]
+    assert not eng.active.any()
+    assert int(jnp.sum(eng.cache["lengths"])) == 0
+
+    reqs2 = [Request(rid=i, prompt=p, max_new=4) for i, p in enumerate(prompts)]
+    for r in reqs2:
+        eng.submit(r)
+    eng.run_until_drained()
+    for a, b in zip(reqs1, reqs2):
+        assert a.out_tokens == b.out_tokens, (a.rid, a.out_tokens, b.out_tokens)
