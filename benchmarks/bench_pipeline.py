@@ -1,11 +1,14 @@
 """Streaming pipeline benchmark: sustained pkt/s and flow/s over the fused
 step (paper headline rows: 31 Mpkt/s extraction, 90 kflow/s use-case 2,
-35.7 kflow/s use-case 3).
+35.7 kflow/s use-case 3), comparing the order-exact scan tracker against the
+vectorized segmented tracker, and per-step dispatch against chunked
+``scan_len`` dispatch (lax.scan over the step).
 
     PYTHONPATH=src python benchmarks/bench_pipeline.py [--smoke]
 
 Rows land in ``benchmarks/run.py --json`` artifacts (CI bench-smoke), so the
-pkt/s / flow/s trajectory is trackable across commits.
+pkt/s / flow/s trajectory — and the segmented-vs-scan speedup — is trackable
+across commits.
 """
 from __future__ import annotations
 
@@ -19,7 +22,8 @@ from benchmarks.common import row  # noqa: E402
 
 
 def _bench_one(flow_model: str, steps: int, batch: int, max_ready: int,
-               table_size: int, active_flows: int, seed: int = 0):
+               table_size: int, active_flows: int, tracker: str,
+               scan_len: int, seed: int = 0):
     import jax
 
     from repro.data.traffic import TrafficConfig, TrafficGenerator
@@ -28,7 +32,8 @@ def _bench_one(flow_model: str, steps: int, batch: int, max_ready: int,
 
     kw = {} if flow_model == "cnn" else {"top_n": 8}
     cfg = PipelineConfig(batch_size=batch, max_ready=max_ready,
-                         flow_model=flow_model, table_size=table_size, **kw)
+                         flow_model=flow_model, table_size=table_size,
+                         tracker=tracker, scan_len=scan_len, **kw)
     pkt_params = paper_models.init_paper_model("mlp", jax.random.PRNGKey(0))
     flow_params = paper_models.init_paper_model(flow_model, jax.random.PRNGKey(1))
     pipe = OctopusPipeline(pkt_params, flow_params, cfg)
@@ -40,31 +45,46 @@ def _bench_one(flow_model: str, steps: int, batch: int, max_ready: int,
     return pipe, stats
 
 
-def run(steps: int = 40, smoke: bool = False):
-    """Yield CSV rows (name,us_per_call,derived) for both flow models.
+def run(steps: int = 48, smoke: bool = False):
+    """Yield CSV rows (name,us_per_call,derived) across (tracker, scan_len).
 
-    Grid: (flow_model, batch, max_ready, table_size, active_flows) — the
-    population is sized so elephants cross the ready threshold well within
-    ``steps`` and the flow engine actually runs."""
-    grid = ([("cnn", 32, 8, 256, 12)] if smoke
-            else [("cnn", 32, 8, 1024, 16), ("cnn", 128, 16, 1024, 64),
-                  ("transformer", 64, 8, 1024, 32)])
-    steps = min(steps, 15) if smoke else steps
-    for flow_model, batch, max_ready, table_size, active_flows in grid:
-        pipe, s = _bench_one(flow_model, steps, batch, max_ready, table_size,
-                             active_flows)
+    Grid: (flow_model, batch, max_ready, table_size, active_flows, tracker,
+    scan_len) — the population is sized so elephants cross the ready
+    threshold well within ``steps`` and the flow engine actually runs.  The
+    smoke grid intentionally holds one shape fixed and varies only tracker /
+    scan_len, so the three rows are directly comparable (the acceptance axis:
+    segmented + scan_len>1 vs the PR 3 scan baseline)."""
+    if smoke:
+        grid = [("cnn", 32, 8, 256, 12, "scan", 1),
+                ("cnn", 32, 8, 256, 12, "segmented", 1),
+                ("cnn", 32, 8, 256, 12, "segmented", 16)]
+        steps = min(steps, 32)
+    else:
+        grid = [("cnn", 32, 8, 1024, 16, "scan", 1),
+                ("cnn", 32, 8, 1024, 16, "segmented", 1),
+                ("cnn", 32, 8, 1024, 16, "segmented", 8),
+                ("cnn", 128, 16, 1024, 64, "segmented", 8),
+                ("transformer", 64, 8, 1024, 32, "scan", 1),
+                ("transformer", 64, 8, 1024, 32, "segmented", 8)]
+    for flow_model, batch, max_ready, table_size, active_flows, tracker, scan_len in grid:
+        # keep steps a multiple of scan_len (at least one full chunk):
+        # partial chunks would compile the per-step path too and muddy the
+        # dispatch-count comparison
+        n_steps = max(scan_len, steps - steps % scan_len)
+        pipe, s = _bench_one(flow_model, n_steps, batch, max_ready, table_size,
+                             active_flows, tracker, scan_len)
         yield row(
-            f"pipeline_{flow_model}_b{batch}", s.step_us,
+            f"pipeline_{flow_model}_b{batch}_{tracker}_x{scan_len}", s.step_us,
             f"pkt_per_s={s.pkt_per_s:.0f};flow_per_s={s.flow_per_s:.1f};"
-            f"steps={s.steps};flows={s.flows};evicted={s.evicted};"
-            f"trace_count={pipe.trace_count}")
+            f"steps={s.steps};dispatches={s.dispatches};flows={s.flows};"
+            f"evicted={s.evicted};trace_count={pipe.trace_count}")
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description="streaming pipeline benchmark")
     ap.add_argument("--smoke", action="store_true",
                     help="single small config for per-PR CI")
-    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--steps", type=int, default=48)
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     for r in run(steps=args.steps, smoke=args.smoke):

@@ -109,6 +109,7 @@ class StepOut(NamedTuple):
     ready: jax.Array  # flow hit top_n with this packet
     new_flow: jax.Array
     evicted: jax.Array
+    arv_intv: jax.Array  # inter-arrival time seen by the tracker (0 at establish)
 
 
 def process_packets(
@@ -157,7 +158,8 @@ def process_packets(
             sizes=st.sizes.at[slot].set(sizes1),
             payload=st.payload.at[slot].set(pay1),
         )
-        out = StepOut(slot=slot, ready=count1 == top_n, new_flow=is_new, evicted=evict)
+        out = StepOut(slot=slot, ready=count1 == top_n, new_flow=is_new,
+                      evicted=evict, arv_intv=arv_intv)
         return st1, out
 
     return lax.scan(step, state, packets)

@@ -54,9 +54,9 @@ HIST = {
 }
 
 
-def default_program() -> jax.Array:
-    """The micro-op program deriving the standard flow features (Table 7
-    subset) from the meta set — one row per output lane: [op, meta_src, hist_src]."""
+def default_program_np() -> np.ndarray:
+    """Host-side (numpy) twin of :func:`default_program` — usable inside jit
+    traces for program-identity checks without creating traced constants."""
     O, M, H = MICRO_OPS, META, HIST
     rows = [
         (O["add"], M["arv_intv"], H["flow_dur"]),
@@ -76,7 +76,42 @@ def default_program() -> jax.Array:
         (O["nop"], M["zero"], H["spare14"]),
         (O["nop"], M["zero"], H["spare15"]),
     ]
-    return jnp.asarray(np.array(rows, dtype=np.int32))
+    return np.array(rows, dtype=np.int32)
+
+
+def default_program() -> jax.Array:
+    """The micro-op program deriving the standard flow features (Table 7
+    subset) from the meta set — one row per output lane: [op, meta_src, hist_src]."""
+    return jnp.asarray(default_program_np())
+
+
+def fold_features(
+    program: jax.Array,
+    slots: jax.Array,
+    meta: jax.Array,
+    feats: jax.Array,
+    *,
+    keep: jax.Array | None = None,
+    block: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fold a packet stream into a (F, 16) feature table through the Pallas
+    ALU-cluster kernel, optionally dropping packets.
+
+    ``keep`` (when given) is a (P,) bool mask: packets with ``keep == False``
+    are redirected to a scratch row appended to the table, so they cannot
+    touch any real flow's state (``wr``/``min`` lanes would otherwise corrupt
+    it — zeroed meta is *not* a no-op).  This is how the tracker paths replay
+    only the packets after a flow's last establish/evict event."""
+    f = feats.shape[0]
+    block = max(1, min(block, slots.shape[0]))
+    if keep is None:
+        return flow_feature_update(program, slots, meta, feats, block=block,
+                                   interpret=interpret)
+    ext = jnp.concatenate([feats, jnp.zeros((1, feats.shape[1]), jnp.int32)])
+    out = flow_feature_update(program, jnp.where(keep, slots, f), meta, ext,
+                              block=block, interpret=interpret)
+    return out[:f]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block"))

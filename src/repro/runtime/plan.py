@@ -24,7 +24,7 @@ or by tracing any JAX callable abstractly (no FLOPs are executed; every
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.runtime import routing
@@ -101,13 +101,17 @@ class RoutePlan:
         """``{step name: engine}`` placement map."""
         return {s.name: s.engine for s in self.steps}
 
-    def scoped(self, prefix: str) -> "RoutePlan":
+    def scoped(self, prefix: str, *, strip: bool = False) -> "RoutePlan":
         """The sub-plan of steps recorded under ``name_scope(prefix)`` (see
         :func:`repro.runtime.routing.name_scope`) — same config, so a
-        composite trace stays queryable per sub-model."""
+        composite trace stays queryable per sub-model.  With ``strip`` the
+        scope prefix is removed from the step names, so the sub-plan reads
+        like the sub-model was traced on its own."""
         p = prefix.rstrip("/") + "/"
-        return RoutePlan(self.config,
-                         tuple(s for s in self.steps if s.name.startswith(p)))
+        steps = tuple(s for s in self.steps if s.name.startswith(p))
+        if strip:
+            steps = tuple(replace(s, name=s.name[len(p) :]) for s in steps)
+        return RoutePlan(self.config, steps)
 
     def macs(self, engine: Optional[str] = None) -> int:
         return sum(s.macs for s in self.steps if engine is None or s.engine == engine)

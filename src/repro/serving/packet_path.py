@@ -13,7 +13,10 @@ Both wrap the end-to-end loop: feature extraction -> DL inference -> decision
 The model-invoke cores live in :class:`PacketEngine` / :class:`FlowEngine`:
 pure ``fn(params, x)`` callables (config captured at construction) that the
 standalone paths jit individually and that the streaming
-:class:`repro.serving.pipeline.OctopusPipeline` composes into one fused step.
+:class:`repro.serving.pipeline.OctopusPipeline` composes into one fused step
+— and, with ``scan_len > 1``, into a ``lax.scan`` over that step, so the
+engines' static input shapes (``batch_size`` packets, ``max_ready`` flow
+rows) are what keeps the whole chunk retrace-free.
 """
 from __future__ import annotations
 

@@ -12,3 +12,11 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+def assert_states_equal(a, b):
+    """Exact (int32) equality of two TrackerState pytrees, field by field —
+    the differential contract shared by the tracker and pipeline tests."""
+    for name, x, y in zip(a._fields, a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"TrackerState.{name}")

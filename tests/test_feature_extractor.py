@@ -1,7 +1,11 @@
 """Feature extracting domain: tracker semantics (establish/update/evict/ready/
-release), scan-vs-segmented equivalence, whole-feature derivation (Table 7)."""
+release), scan-vs-segmented equivalence (empty table, live-state composition,
+collision fallback, Pallas arms), whole-feature derivation (Table 7)."""
+import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+from conftest import assert_states_equal
 from hypothesis_compat import given, settings, st
 
 from repro.core import flow_tracker as ft
@@ -9,6 +13,7 @@ from repro.core.feature_extractor import (
     ExtractorConfig,
     FeatureExtractor,
     derive_whole_features,
+    segmented_update,
 )
 from repro.data.packets import PacketTraceConfig, synth_packet_trace
 from repro.kernels.flow_features.ops import HIST
@@ -104,18 +109,102 @@ def test_segmented_matches_scan_on_trace():
                                   np.asarray(payload)[occupied])
 
 
-@settings(max_examples=10, deadline=None)
-@given(seed=st.integers(0, 1000), nflows=st.integers(2, 30), npkts=st.integers(1, 10))
-def test_segmented_scan_property(seed, nflows, npkts):
-    cfg = PacketTraceConfig(num_flows=nflows, pkts_per_flow=npkts, seed=seed,
-                            table_size=256)
+def test_segmented_update_composes_with_live_state():
+    """The microbatch merge must be exact when flows already live in the
+    table: scan batch 1, segment-merge batch 2, compare against scanning
+    both (full state, event counts included)."""
+    cfg = PacketTraceConfig(num_flows=40, pkts_per_flow=8, seed=5, table_size=256)
     packets, *_ = synth_packet_trace(cfg)
-    ex = make_extractor(table_size=256, top_n=max(npkts, 2), top_k=2, pay_bytes=16)
+    ex = make_extractor(table_size=256, top_n=8, top_k=4, pay_bytes=16)
+    P = int(packets.ts.shape[0])
+    b1 = jax.tree_util.tree_map(lambda a: a[: P // 2], packets)
+    b2 = jax.tree_util.tree_map(lambda a: a[P // 2 :], packets)
+
+    st_mid, _ = ft.process_packets(ex.init_state(), b1, ex.program, top_n=8)
+    st_scan, outs = ft.process_packets(st_mid, b2, ex.program, top_n=8)
+    st_seg, seg = ex.segmented_update(st_mid, b2)
+    assert_states_equal(st_scan, st_seg)
+    assert int(seg.new_flows) == int(np.asarray(outs.new_flow).sum())
+    assert int(seg.evicted) == int(np.asarray(outs.evicted).sum())
+    assert int(seg.fallback_slots) == 0  # collision-free trace: no fallback
+
+
+def test_segmented_update_collision_fallback_exact():
+    """In-batch slot collisions (mixed tuple hashes in one segment) must take
+    the scan oracle's values — bit-exact state and event counts."""
+    cfg = PacketTraceConfig(num_flows=40, pkts_per_flow=6, seed=7,
+                            table_size=16, collision_free=False)
+    packets, *_ = synth_packet_trace(cfg)
+    ex = make_extractor(table_size=16, top_n=6, top_k=4, pay_bytes=16)
+    st_scan, outs = ft.process_packets(ex.init_state(), packets, ex.program,
+                                       top_n=6)
+    st_seg, seg = jax.jit(ex.segmented_update)(ex.init_state(), packets)
+    assert int(seg.fallback_slots) > 0  # the trace actually collides
+    assert_states_equal(st_scan, st_seg)
+    assert int(seg.new_flows) == int(np.asarray(outs.new_flow).sum())
+    assert int(seg.evicted) == int(np.asarray(outs.evicted).sum())
+
+
+def test_segmented_update_pallas_matches_oracle():
+    """With use_pallas the feature lanes come from the Pallas ALU fold —
+    still bit-exact, collisions included."""
+    cfg = PacketTraceConfig(num_flows=30, pkts_per_flow=6, seed=9,
+                            table_size=32, collision_free=False)
+    packets, *_ = synth_packet_trace(cfg)
+    ex = make_extractor(table_size=32, top_n=6, top_k=4, pay_bytes=16,
+                        use_pallas=True, interpret=True)
+    st_scan, _ = ft.process_packets(ex.init_state(), packets, ex.program,
+                                    top_n=6)
+    st_seg, _ = ex.segmented_update(ex.init_state(), packets)
+    assert_states_equal(st_scan, st_seg)
+
+
+def test_extract_scan_pallas_arm_matches_plain():
+    """The use_pallas arm of extract_scan replays the ALU fold through the
+    kernel — identical state to the plain scan, establish/evict included."""
+    cfg = PacketTraceConfig(num_flows=30, pkts_per_flow=6, seed=11,
+                            table_size=32, collision_free=False)
+    packets, *_ = synth_packet_trace(cfg)
+    plain = make_extractor(table_size=32, top_n=6, top_k=4, pay_bytes=16)
+    pallas = make_extractor(table_size=32, top_n=6, top_k=4, pay_bytes=16,
+                            use_pallas=True, interpret=True)
+    st_a, outs_a = plain.extract_scan(plain.init_state(), packets)
+    st_b, outs_b = pallas.extract_scan(pallas.init_state(), packets)
+    assert_states_equal(st_a, st_b)
+    for name, x, y in zip(outs_a._fields, outs_a, outs_b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"StepOut.{name}")
+
+
+def test_segmented_update_rejects_custom_program_without_pallas():
+    """The jnp segment-reduction lanes hard-code the default program; a
+    different concrete program must be refused loudly (use_pallas folds any
+    program, so it is exempt)."""
+    cfg = PacketTraceConfig(num_flows=4, pkts_per_flow=2, seed=0, table_size=32)
+    packets, *_ = synth_packet_trace(cfg)
+    ex = make_extractor(table_size=32, top_n=4, top_k=4, pay_bytes=16)
+    custom = jnp.zeros((16, 3), jnp.int32)
+    with pytest.raises(ValueError, match="default"):
+        segmented_update(ex.init_state(), packets, custom, top_n=4)
+    # the same program folds fine through the Pallas kernel
+    segmented_update(ex.init_state(), packets, custom, top_n=4,
+                     use_pallas=True, interpret=True)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), nflows=st.integers(2, 30),
+       npkts=st.integers(1, 10), collision_free=st.booleans())
+def test_segmented_scan_property(seed, nflows, npkts, collision_free):
+    table = 256 if collision_free else 16  # small table forces collisions
+    cfg = PacketTraceConfig(num_flows=nflows, pkts_per_flow=npkts, seed=seed,
+                            table_size=table, collision_free=collision_free)
+    packets, *_ = synth_packet_trace(cfg)
+    ex = make_extractor(table_size=table, top_n=max(npkts, 2), top_k=2, pay_bytes=16)
     st_scan, _ = ex.extract_scan(ex.init_state(), packets)
-    feats, *_ , counts = ex.extract_segmented(packets)
-    occ = np.asarray(counts) > 0
-    np.testing.assert_array_equal(np.asarray(st_scan.features)[occ],
-                                  np.asarray(feats)[occ])
+    feats, series, sizes, payload, counts = ex.extract_segmented(packets)
+    np.testing.assert_array_equal(np.asarray(st_scan.features), np.asarray(feats))
+    np.testing.assert_array_equal(np.asarray(st_scan.count), np.asarray(counts))
+    np.testing.assert_array_equal(np.asarray(st_scan.series), np.asarray(series))
 
 
 def test_derive_whole_features():

@@ -1,10 +1,12 @@
 """Streaming pipeline: differential test against a pure-Python oracle
-tracker, interpret-vs-compiled parity, jit cache stability (no per-step
-retrace), and the combined placement report."""
+tracker (both trackers, forced collisions included), chunked-dispatch
+equivalence across scan_len, interpret-vs-compiled parity, jit cache
+stability (no per-step retrace), and the combined placement report."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import assert_states_equal
 
 from repro.core import flow_tracker as ft
 from repro.data.traffic import TrafficConfig, TrafficGenerator
@@ -109,11 +111,14 @@ def params():
     }
 
 
-def test_pipeline_matches_python_oracle(params):
+@pytest.mark.parametrize("tracker", ["segmented", "scan"])
+def test_pipeline_matches_python_oracle(params, tracker):
     """Differential: every drained flow over seeded mice/elephant traffic must
-    equal the pure-Python oracle exactly (int32 features, series, payload)."""
+    equal the pure-Python oracle exactly (int32 features, series, payload) —
+    for the vectorized segmented tracker and the lax.scan oracle alike."""
     cfg = PipelineConfig(batch_size=24, max_ready=4, flow_model="transformer",
-                         table_size=64, top_n=6, top_k=15, pay_bytes=16)
+                         table_size=64, top_n=6, top_k=15, pay_bytes=16,
+                         tracker=tracker)
     pipe = OctopusPipeline(params["mlp"], params["transformer"], cfg)
     gen = TrafficGenerator(TrafficConfig(
         batch_size=24, active_flows=16, elephant_fraction=0.5,
@@ -154,6 +159,142 @@ def test_pipeline_matches_python_oracle(params):
             np.asarray(pipe.state.features[slot]),
             np.asarray(oracle.feature_word(e), np.int32))
     assert {int(s) for s in np.flatnonzero(live)} == set(oracle.slots)
+
+
+def test_segmented_pipeline_matches_oracle_under_forced_collisions(params):
+    """Same differential, but with random (non-collision-avoiding) traffic on
+    a tiny table: in-batch slot collisions must route through the segmented
+    tracker's scan fallback and still match the oracle bit-for-bit."""
+    cfg = PipelineConfig(batch_size=24, max_ready=4, flow_model="transformer",
+                         table_size=16, top_n=4, top_k=15, pay_bytes=16,
+                         tracker="segmented")
+    pipe = OctopusPipeline(params["mlp"], params["transformer"], cfg)
+    gen = TrafficGenerator(TrafficConfig(
+        batch_size=24, active_flows=12, elephant_fraction=0.5, table_size=16,
+        seed=13, burst_prob=0.4, collision_free=False))
+    oracle = OracleTracker(16, top_n=4, top_k=15, pay_bytes=16)
+
+    saw_mixed_segment = False
+    for _ in range(20):
+        batch = gen.next_batch()
+        dicts = batch_as_dicts(batch)
+        by_slot: dict[int, set] = {}
+        for pkt in dicts:
+            by_slot.setdefault(oracle.slot_of(pkt["tuple_hash"]), set()).add(
+                pkt["tuple_hash"])
+        saw_mixed_segment |= any(len(v) > 1 for v in by_slot.values())
+        for pkt in dicts:
+            oracle.process(pkt)
+        expect = oracle.drain_ready(cfg.max_ready)
+        out = pipe.step(batch)
+        d = out.drained
+        assert int(np.asarray(d.mask).sum()) == len(expect)
+        for r, want in enumerate(expect):
+            assert int(d.slots[r]) == want["slot"]
+            assert int(d.tuple_id[r]) == want["tuple_id"]
+            np.testing.assert_array_equal(
+                np.asarray(d.features[r]), np.asarray(want["features"], np.int32))
+            np.testing.assert_array_equal(
+                np.asarray(d.series[r]), np.asarray(want["series"], np.int32))
+    assert saw_mixed_segment  # the stream actually exercised the fallback
+    assert pipe.stats.evicted > 0  # collision churn reached the tracker
+
+    # residual table agrees (live flows, exact int32)
+    live = np.asarray(pipe.state.count) > 0
+    for slot in np.flatnonzero(live):
+        e = oracle.slots[int(slot)]
+        assert int(pipe.state.tuple_id[slot]) == e["tuple_id"]
+        np.testing.assert_array_equal(
+            np.asarray(pipe.state.features[slot]),
+            np.asarray(oracle.feature_word(e), np.int32))
+    assert {int(s) for s in np.flatnonzero(live)} == set(oracle.slots)
+
+
+def test_chunked_dispatch_matches_per_step(params):
+    """scan_len > 1 must change only the dispatch granularity: final state,
+    rule table and event counters all equal the per-step run, with one trace
+    and steps/scan_len device round-trips."""
+    def traffic():
+        return TrafficGenerator(TrafficConfig(
+            batch_size=16, active_flows=12, elephant_fraction=0.5,
+            table_size=128, seed=3))
+
+    ref = OctopusPipeline(params["mlp"], params["cnn"], PipelineConfig(
+        batch_size=16, max_ready=4, flow_model="cnn", table_size=128))
+    ref.run(traffic(), steps=12)
+
+    chunked = OctopusPipeline(params["mlp"], params["cnn"], PipelineConfig(
+        batch_size=16, max_ready=4, flow_model="cnn", table_size=128,
+        scan_len=4))
+    chunked.warmup()
+    chunked.run(traffic(), steps=12)
+
+    assert_states_equal(ref.state, chunked.state)
+    assert chunked.rules.rules == ref.rules.rules
+    assert (chunked.stats.flows, chunked.stats.new_flows, chunked.stats.evicted) \
+        == (ref.stats.flows, ref.stats.new_flows, ref.stats.evicted)
+    assert chunked.stats.steps == 12 and chunked.stats.dispatches == 3
+    assert ref.stats.dispatches == 12
+    assert chunked.trace_count == 1  # one trace across the multi-chunk run
+
+
+def test_flow_straddling_chunk_boundary_drains_identically(params):
+    """A flow whose packets split across two scanned chunks must carry its
+    state through the scan and drain exactly once, in the right step slot."""
+    cfg = PipelineConfig(batch_size=4, max_ready=2, flow_model="transformer",
+                         table_size=16, top_n=8, top_k=15, pay_bytes=16,
+                         scan_len=2)
+    pipe = OctopusPipeline(params["mlp"], params["transformer"], cfg)
+    pipe.warmup()
+    assert pipe.trace_count == 1
+
+    h = 77  # one flow; its 8 packets arrive over two 2-step chunks
+
+    def batch(ts0):
+        return ft.PacketBatch(
+            ts=jnp.asarray([ts0 + 10 * i for i in range(4)], jnp.int32),
+            size=jnp.full((4,), 100, jnp.int32),
+            dir=jnp.zeros((4,), jnp.int32), flags=jnp.zeros((4,), jnp.int32),
+            proto=jnp.zeros((4,), jnp.int32),
+            tuple_hash=jnp.full((4,), h, jnp.int32),
+            payload=jnp.zeros((4, 16), jnp.int32))
+
+    # quiet filler: one-packet mice flows that never reach top_n and never
+    # hash onto flow h's slot (they must not evict it mid-test)
+    h_slot = ft.hash_slot_scalar(h, cfg.table_size)
+    fillers = [t for t in range(1000, 1400)
+               if ft.hash_slot_scalar(t, cfg.table_size) != h_slot]
+
+    def quiet(ts0, salt):
+        return ft.PacketBatch(
+            ts=jnp.full((4,), ts0, jnp.int32),
+            size=jnp.full((4,), 60, jnp.int32),
+            dir=jnp.zeros((4,), jnp.int32), flags=jnp.zeros((4,), jnp.int32),
+            proto=jnp.zeros((4,), jnp.int32),
+            tuple_hash=jnp.asarray(fillers[4 * salt : 4 * salt + 4], jnp.int32),
+            payload=jnp.zeros((4, 16), jnp.int32))
+
+    out1 = pipe.step_many([batch(100), quiet(135, 0)])  # 4 of 8 packets
+    assert int(np.asarray(out1.drained.mask).sum()) == 0
+    out2 = pipe.step_many([quiet(138, 1), batch(140)])  # remaining 4 cross top_n
+    masks = np.asarray(out2.drained.mask)  # (scan_len, max_ready)
+    assert masks[0].sum() == 0 and masks[1].sum() == 1  # drains in step 2
+    drained_row = int(np.flatnonzero(masks[1])[0])
+    assert int(out2.drained.tuple_id[1, drained_row]) == h
+    assert int(out2.drained.count[1, drained_row]) == 8
+    # interval series crosses both chunk boundaries seamlessly
+    assert np.asarray(
+        out2.drained.series[1, drained_row])[:8].tolist() == [0] + [10] * 7
+    assert pipe.trace_count == 1
+    assert pipe.stats.steps == 4 and pipe.stats.dispatches == 2
+
+
+def test_step_many_rejects_wrong_chunk_length(params):
+    cfg = PipelineConfig(batch_size=4, max_ready=2, flow_model="cnn",
+                         table_size=16, scan_len=3)
+    pipe = OctopusPipeline(params["mlp"], params["cnn"], cfg)
+    with pytest.raises(ValueError, match="scan_len"):
+        pipe.step_many([pipe._zero_batch()] * 2)
 
 
 def test_interpret_vs_compiled_step_parity(params):
@@ -255,6 +396,10 @@ def test_pipeline_config_validation():
         PipelineConfig(flow_model="transformer", top_k=3)
     with pytest.raises(ValueError):
         PipelineConfig(max_ready=0)
+    with pytest.raises(ValueError):
+        PipelineConfig(tracker="bogus")
+    with pytest.raises(ValueError):
+        PipelineConfig(scan_len=0)
     # transformer frees top_n from the CNN's sequence length
     assert PipelineConfig(flow_model="transformer", top_n=4).top_n == 4
 

@@ -1,0 +1,105 @@
+"""Docs checker: every fenced ``python`` block in the given markdown files
+must execute, and every ``repro.*`` dotted path named anywhere in them must
+resolve (module import, optionally + attribute chain).
+
+    PYTHONPATH=src python tools/check_docs.py README.md docs/ARCHITECTURE.md
+
+Execution model: blocks of one file run *in order in one shared namespace*
+(like a reader typing them into one REPL), so later blocks may use names an
+earlier block defined.  Blocks fenced as ```python are executed; any other
+info string (```bash, ```text, ...) is skipped.  Keep doc snippets small —
+this runs on CPU in CI on every PR.
+
+The dead-reference lint catches docs drifting from the tree: renaming a
+module without updating README/ARCHITECTURE fails CI instead of shipping a
+stale paper→module map.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import re
+import sys
+import traceback
+
+FENCE = re.compile(r"^```(\w*)\s*$")
+# dotted repro paths in prose or code: repro.core.flow_tracker,
+# repro.serving.OctopusPipeline, ... (at least one dotted component)
+REF = re.compile(r"\brepro(?:\.[A-Za-z_][A-Za-z0-9_]*)+")
+
+
+def python_blocks(text: str) -> list[tuple[int, str]]:
+    """(first-line-number, source) for every ```python fenced block."""
+    blocks = []
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE.match(lines[i])
+        if m and m.group(1) == "python":
+            start = i + 1
+            j = start
+            while j < len(lines) and not lines[j].startswith("```"):
+                j += 1
+            blocks.append((start + 1, "\n".join(lines[start:j])))
+            i = j + 1
+        else:
+            i += 1
+    return blocks
+
+
+def resolve_ref(path: str) -> str | None:
+    """Import the longest module prefix of ``path``, then getattr the rest.
+    Returns an error string, or None when the reference resolves."""
+    parts = path.split(".")
+    for cut in range(len(parts), 0, -1):
+        mod_name = ".".join(parts[:cut])
+        try:
+            obj = importlib.import_module(mod_name)
+        except ImportError:
+            continue
+        try:
+            for attr in parts[cut:]:
+                obj = getattr(obj, attr)
+        except AttributeError as e:
+            return f"{path}: imported {mod_name} but {e}"
+        return None
+    return f"{path}: no importable module prefix"
+
+
+def check_file(path: str) -> list[str]:
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    errors = []
+
+    ns: dict = {"__name__": f"doccheck_{path}"}
+    for lineno, src in python_blocks(text):
+        try:
+            exec(compile(src, f"{path}:{lineno}", "exec"), ns)  # noqa: S102
+        except Exception:
+            errors.append(f"{path}:{lineno}: python block failed:\n"
+                          f"{traceback.format_exc(limit=3)}")
+
+    for ref in sorted({m.group(0).rstrip(".") for m in REF.finditer(text)}):
+        err = resolve_ref(ref)
+        if err:
+            errors.append(f"{path}: dead reference {err}")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="execute doc snippets + lint repro.* references")
+    ap.add_argument("files", nargs="+", help="markdown files to check")
+    args = ap.parse_args(argv)
+    failures = []
+    for path in args.files:
+        errs = check_file(path)
+        status = "FAIL" if errs else "ok"
+        print(f"[docs-check] {path}: {status}")
+        failures.extend(errs)
+    for e in failures:
+        print(e, file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
