@@ -1,13 +1,21 @@
 """Streaming pipeline benchmark: sustained pkt/s and flow/s over the fused
 step (paper headline rows: 31 Mpkt/s extraction, 90 kflow/s use-case 2,
 35.7 kflow/s use-case 3), comparing the order-exact scan tracker against the
-vectorized segmented tracker, and per-step dispatch against chunked
-``scan_len`` dispatch (lax.scan over the step).
+vectorized segmented tracker, per-step dispatch against chunked ``scan_len``
+dispatch, and the single-lane pipeline against hash-partitioned multi-lane
+sharding (``num_shards`` > 0 rows).
+
+The sharded rows are *weak scaling*, the paper's own lane-scaling axis
+(§2.2: each extractor lane serves its own port): per-lane offered load is
+held at ``batch/num_shards`` packets per step with a fixed per-lane capacity,
+so the aggregate ingest grows with the lane count — pkt/s should rise
+monotonically with ``num_shards`` as the lanes amortize the fixed
+per-dispatch cost.  ``padded`` reports the skew cost the keep-masks absorb.
 
     PYTHONPATH=src python benchmarks/bench_pipeline.py [--smoke]
 
 Rows land in ``benchmarks/run.py --json`` artifacts (CI bench-smoke), so the
-pkt/s / flow/s trajectory — and the segmented-vs-scan speedup — is trackable
+pkt/s / flow/s trajectory — and the shard-scaling curve — is trackable
 across commits.
 """
 from __future__ import annotations
@@ -23,12 +31,17 @@ from benchmarks.common import row  # noqa: E402
 
 def _bench_one(flow_model: str, steps: int, batch: int, max_ready: int,
                table_size: int, active_flows: int, tracker: str,
-               scan_len: int, seed: int = 0):
+               scan_len: int, num_shards: int = 0, lane_batch=None,
+               seed: int = 0):
     import jax
 
     from repro.data.traffic import TrafficConfig, TrafficGenerator
     from repro.models import paper_models
-    from repro.serving import OctopusPipeline, PipelineConfig
+    from repro.serving import (
+        OctopusPipeline,
+        PipelineConfig,
+        ShardedOctopusPipeline,
+    )
 
     kw = {} if flow_model == "cnn" else {"top_n": 8}
     cfg = PipelineConfig(batch_size=batch, max_ready=max_ready,
@@ -36,7 +49,12 @@ def _bench_one(flow_model: str, steps: int, batch: int, max_ready: int,
                          tracker=tracker, scan_len=scan_len, **kw)
     pkt_params = paper_models.init_paper_model("mlp", jax.random.PRNGKey(0))
     flow_params = paper_models.init_paper_model(flow_model, jax.random.PRNGKey(1))
-    pipe = OctopusPipeline(pkt_params, flow_params, cfg)
+    if num_shards:
+        pipe = ShardedOctopusPipeline(pkt_params, flow_params, cfg,
+                                      num_shards=num_shards,
+                                      lane_batch=lane_batch)
+    else:
+        pipe = OctopusPipeline(pkt_params, flow_params, cfg)
     gen = TrafficGenerator(TrafficConfig(
         batch_size=batch, active_flows=active_flows, elephant_fraction=0.3,
         table_size=table_size, seed=seed))
@@ -45,15 +63,26 @@ def _bench_one(flow_model: str, steps: int, batch: int, max_ready: int,
     return pipe, stats
 
 
+def _shard_grid(smoke: bool):
+    """(per_lane_load, num_shards, lane_batch, table_size) weak-scaling rows:
+    aggregate batch = per_lane_load x num_shards, per-lane capacity fixed at
+    1.5x the per-lane load (skew headroom; overflow spills into extra merge
+    rounds).  The full grid's 8-lane row runs 8 x 1024-slot banks — the
+    paper's 8k-flow table, one lane per bank."""
+    per_lane, cap = 128, 192
+    shards = (1, 2, 4) if smoke else (1, 2, 4, 8)
+    return [(per_lane, s, cap if s > 1 else None, 1024) for s in shards]
+
+
 def run(steps: int = 48, smoke: bool = False):
-    """Yield CSV rows (name,us_per_call,derived) across (tracker, scan_len).
+    """Yield CSV rows (name,us_per_call,derived) across (tracker, scan_len,
+    num_shards).
 
     Grid: (flow_model, batch, max_ready, table_size, active_flows, tracker,
-    scan_len) — the population is sized so elephants cross the ready
-    threshold well within ``steps`` and the flow engine actually runs.  The
-    smoke grid intentionally holds one shape fixed and varies only tracker /
-    scan_len, so the three rows are directly comparable (the acceptance axis:
-    segmented + scan_len>1 vs the PR 3 scan baseline)."""
+    scan_len) for the single-lane rows — one shape held fixed so tracker /
+    scan_len rows stay directly comparable — plus the `_shard_grid` sharded
+    family (segmented tracker), whose rows share a per-lane load so the
+    num_shards axis is the only variable."""
     if smoke:
         grid = [("cnn", 32, 8, 256, 12, "scan", 1),
                 ("cnn", 32, 8, 256, 12, "segmented", 1),
@@ -78,6 +107,19 @@ def run(steps: int = 48, smoke: bool = False):
             f"pkt_per_s={s.pkt_per_s:.0f};flow_per_s={s.flow_per_s:.1f};"
             f"steps={s.steps};dispatches={s.dispatches};flows={s.flows};"
             f"evicted={s.evicted};trace_count={pipe.trace_count}")
+
+    shard_steps = min(steps, 24) if smoke else min(steps, 32)
+    for per_lane, num_shards, lane_batch, table_size in _shard_grid(smoke):
+        batch = per_lane * num_shards
+        pipe, s = _bench_one("cnn", shard_steps, batch, 16, table_size,
+                             32 * num_shards, "segmented", 1,
+                             num_shards=num_shards, lane_batch=lane_batch)
+        yield row(
+            f"pipeline_cnn_lane{per_lane}_segmented_s{num_shards}", s.step_us,
+            f"pkt_per_s={s.pkt_per_s:.0f};flow_per_s={s.flow_per_s:.1f};"
+            f"steps={s.steps};dispatches={s.dispatches};padded={s.padded};"
+            f"backend={pipe.backend};flows={s.flows};"
+            f"trace_count={pipe.trace_count}")
 
 
 def main(argv=None) -> int:

@@ -42,6 +42,9 @@ def main():
                     help="streaming pipeline microbatches")
     ap.add_argument("--scan-len", type=int, default=8,
                     help="microbatches fused per dispatch (lax.scan chunk)")
+    ap.add_argument("--num-shards", type=int, default=2,
+                    help="hash-partitioned tracker lanes (1 disables the "
+                         "sharded weak-scaling demo)")
     args = ap.parse_args()
 
     from repro.core.feature_extractor import ExtractorConfig, FeatureExtractor
@@ -156,6 +159,26 @@ def main():
     print(f"[pipeline] rule table: {len(pipe.rules.rules)} rules, "
           f"gen={pipe.rules.generation}, step latency {stats.step_us:.0f} us, "
           f"traces={pipe.trace_count} (no retrace after warmup)")
+
+    # ------------------------------------- sharded lanes (weak scaling, §2.2)
+    if args.num_shards > 1:
+        from repro.serving import ShardedOctopusPipeline
+
+        S, per_lane = args.num_shards, 64
+        sharded = ShardedOctopusPipeline(
+            mlp_params, cnn_params,
+            PipelineConfig(batch_size=per_lane * S, max_ready=max(8, 4 * S),
+                           flow_model="cnn", table_size=1024),
+            num_shards=S, lane_batch=int(1.5 * per_lane))
+        traffic = TrafficGenerator(TrafficConfig(
+            batch_size=per_lane * S, active_flows=32 * S,
+            elephant_fraction=0.3, table_size=1024, seed=0))
+        sharded.warmup()
+        st = sharded.run(traffic, steps=max(4, args.steps // 2))
+        print(f"[sharded] {S} lanes ({sharded.backend}), per-lane load "
+              f"{per_lane} pkts: {st.pkt_per_s/1e6:.3f} Mpkt/s aggregate "
+              f"({st.packets} pkts, {st.padded} padded lane rows, "
+              f"{st.dispatches} dispatches), {st.flows} flows classified")
 
 
 if __name__ == "__main__":

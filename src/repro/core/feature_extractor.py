@@ -90,6 +90,38 @@ def check_default_program(program: jax.Array) -> None:
             "an ALU replay); set use_pallas=True or use the scan tracker")
 
 
+FALLBACK_MODES = ("auto", "always", "never")
+
+
+def _mixed_segment_heads(s_slot: jax.Array, s_hash: jax.Array,
+                         table_size: int) -> jax.Array:
+    """(P,) bool over slot-sorted packets — True where a tuple-hash flip
+    occurs inside one slot segment (sentinel rows >= table_size excluded).
+    The ONE in-batch collision predicate: :func:`segmented_update`'s scan
+    fallback and :func:`batch_collisions` must agree, so both call this."""
+    return jnp.concatenate([
+        jnp.zeros((1,), bool),
+        (s_slot[1:] == s_slot[:-1]) & (s_hash[1:] != s_hash[:-1])
+        & (s_slot[1:] < table_size)])
+
+
+def batch_collisions(packets: ft.PacketBatch, table_size: int,
+                     keep: Optional[jax.Array] = None) -> jax.Array:
+    """() bool — does this (optionally masked) microbatch contain an in-batch
+    slot collision (two distinct tuple hashes mapping to one slot)?  This is
+    exactly the predicate :func:`segmented_update`'s scan fallback guards on
+    (both share :func:`_mixed_segment_heads`), exposed so batched callers
+    (the sharded pipeline's vmapped lanes) can hoist the branch *outside*
+    their vmap — a vmapped ``lax.cond`` lowers to a select that pays for
+    both branches, i.e. the whole scan oracle on every batch."""
+    slots = ft.hash_slot(packets.tuple_hash, table_size)
+    if keep is not None:
+        slots = jnp.where(keep, slots, table_size)
+    order = jnp.argsort(slots, stable=True)
+    return _mixed_segment_heads(slots[order], packets.tuple_hash[order],
+                                table_size).any()
+
+
 def segmented_update(
     state: ft.TrackerState,
     packets: ft.PacketBatch,
@@ -98,6 +130,8 @@ def segmented_update(
     top_n: int,
     use_pallas: bool = False,
     interpret: Optional[bool] = None,
+    keep: Optional[jax.Array] = None,
+    fallback: str = "auto",
 ) -> tuple[ft.TrackerState, SegmentedOut]:
     """Merge a whole microbatch into the live tracker state in one vectorized
     pass — the TPU-parallel replacement for the per-packet scan.
@@ -110,7 +144,22 @@ def segmented_update(
     segment) cannot be expressed as a single segment reduction; those slots
     take the scan oracle's values via a ``lax.cond`` fallback that only
     executes when a collision is actually present in the batch.
+
+    ``keep`` (optional, (P,) bool) drops packets without changing shapes:
+    masked-out packets sort to the out-of-range sentinel slot, so every
+    segment reduction and scatter ignores them — the exactness contract then
+    holds against scanning only the kept packets.  This is how the sharded
+    lanes consume hash-partitioned (padded) microbatches.
+
+    ``fallback`` controls the collision branch: ``"auto"`` (default) guards
+    it with a ``lax.cond``; ``"always"``/``"never"`` select a branch
+    statically, for callers that hoist the :func:`batch_collisions`
+    predicate outside a vmap.  ``"never"`` is only exact when the batch
+    really has no in-batch collision — callers own that guard.
     """
+    if fallback not in FALLBACK_MODES:
+        raise ValueError(f"fallback must be one of {FALLBACK_MODES}, "
+                         f"got {fallback!r}")
     if program is None:
         program = default_program()
     if not use_pallas:
@@ -123,24 +172,31 @@ def segmented_update(
     top_k = state.payload.shape[1]
     pay_bytes = state.payload.shape[2]
     P = packets.ts.shape[0]
+    masked = keep is not None  # unmasked callers keep the kernel fast path
+    if keep is None:
+        keep = jnp.ones((P,), bool)
 
     slots = ft.hash_slot(packets.tuple_hash, F)
+    # masked-out packets take the sentinel slot F: they sort to the end and
+    # every segment reduction / scatter (num_segments == F, mode="drop")
+    # ignores them
+    slots_eff = jnp.where(keep, slots, F)
     # stable sort by slot: per-flow packets stay in batch (arrival) order
-    order = jnp.argsort(slots, stable=True)
+    order = jnp.argsort(slots_eff, stable=True)
     s = jax.tree_util.tree_map(lambda a: a[order], packets)
-    s_slot = slots[order]
+    s_slot = slots_eff[order]
+    s_keep = keep[order]
 
     first = jnp.concatenate([jnp.ones((1,), bool), s_slot[1:] != s_slot[:-1]])
     ones = jnp.ones((P,), jnp.int32)
     counts_b = jax.ops.segment_sum(ones, s_slot, F, indices_are_sorted=True)
     touched = counts_b > 0
 
-    # in-batch collision: a segment holding >1 distinct tuple hash
-    mixed = jnp.concatenate(
-        [jnp.zeros((1,), bool),
-         (s_slot[1:] == s_slot[:-1]) & (s.tuple_hash[1:] != s.tuple_hash[:-1])])
+    # in-batch collision: a segment holding >1 distinct tuple hash (the
+    # shared predicate — batch_collisions must see exactly these flips)
+    mixed = _mixed_segment_heads(s_slot, s.tuple_hash, F)
     collide = jnp.zeros((F,), jnp.int32).at[s_slot].max(
-        mixed.astype(jnp.int32)) > 0
+        mixed.astype(jnp.int32), mode="drop") > 0
 
     # single-hash segments: any reduction of equal values recovers the hash
     h_f = jax.ops.segment_max(s.tuple_hash, s_slot, F, indices_are_sorted=True)
@@ -173,6 +229,7 @@ def segmented_update(
         # feats_base; colliding slots are overwritten by the fallback)
         meta = jax.vmap(ft.build_meta)(s, intv)
         feats = fold_features(program, s_slot, meta, feats_base,
+                              keep=s_keep if masked else None,
                               interpret=interpret)
     else:
         segsum = lambda x: jax.ops.segment_sum(x, s_slot, F,
@@ -233,7 +290,7 @@ def segmented_update(
 
     def with_fallback(_):
         scan_state, outs = ft.process_packets(state, packets, program,
-                                              top_n=top_n)
+                                              top_n=top_n, keep=keep)
 
         def pick(seg_leaf, scan_leaf):
             m = collide.reshape((F,) + (1,) * (seg_leaf.ndim - 1))
@@ -247,8 +304,13 @@ def segmented_update(
     def without_fallback(_):
         return seg_state, new_nc, ev_nc
 
-    state1, new_flows, evicted = lax.cond(collide.any(), with_fallback,
-                                          without_fallback, operand=None)
+    if fallback == "always":
+        state1, new_flows, evicted = with_fallback(None)
+    elif fallback == "never":
+        state1, new_flows, evicted = without_fallback(None)
+    else:
+        state1, new_flows, evicted = lax.cond(collide.any(), with_fallback,
+                                              without_fallback, operand=None)
     out = SegmentedOut(new_flows=new_flows, evicted=evicted,
                        fallback_slots=jnp.sum(collide).astype(jnp.int32))
     return state1, out

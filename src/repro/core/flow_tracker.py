@@ -15,7 +15,7 @@ occupied slot evicts the stale flow (outdated-flow recycling).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -118,14 +118,25 @@ def process_packets(
     program: jax.Array,
     *,
     top_n: int,
+    keep: Optional[jax.Array] = None,
 ) -> tuple[TrackerState, StepOut]:
     """Order-exact oracle: lax.scan over packets (the FPGA processes packets
     serially at line rate).  See feature_extractor.extract_segmented for the
-    TPU-parallel path."""
+    TPU-parallel path.
+
+    ``keep`` (optional, (P,) bool) drops packets without changing shapes: a
+    masked-out packet is a complete no-op on the table (its scatter lands on
+    the out-of-range sentinel slot ``table_size`` and is dropped) and its
+    :class:`StepOut` row is neutral (slot == table_size, all flags False).
+    This is how the sharded lanes process hash-partitioned microbatches whose
+    static per-lane shape is padded."""
     table_size = state.tuple_id.shape[0]
     top_k = state.payload.shape[1]
+    if keep is None:
+        keep = jnp.ones(packets.ts.shape, bool)
 
-    def step(st: TrackerState, pkt: PacketBatch):
+    def step(st: TrackerState, xs):
+        pkt, k = xs
         slot = hash_slot(pkt.tuple_hash, table_size)
         occupied = st.count[slot] > 0
         hit = occupied & (st.tuple_id[slot] == pkt.tuple_hash)
@@ -149,20 +160,22 @@ def process_packets(
         pay1 = pay0.at[kidx].set(jnp.where(count0 < top_k, pkt.payload, pay0[kidx]))
 
         count1 = count0 + 1
+        # masked-out packets write to the out-of-range sentinel slot: dropped
+        upd = jnp.where(k, slot, table_size)
         st1 = TrackerState(
-            tuple_id=st.tuple_id.at[slot].set(pkt.tuple_hash),
-            count=st.count.at[slot].set(count1),
-            last_ts=st.last_ts.at[slot].set(pkt.ts),
-            features=st.features.at[slot].set(new_feats),
-            series=st.series.at[slot].set(series1),
-            sizes=st.sizes.at[slot].set(sizes1),
-            payload=st.payload.at[slot].set(pay1),
+            tuple_id=st.tuple_id.at[upd].set(pkt.tuple_hash, mode="drop"),
+            count=st.count.at[upd].set(count1, mode="drop"),
+            last_ts=st.last_ts.at[upd].set(pkt.ts, mode="drop"),
+            features=st.features.at[upd].set(new_feats, mode="drop"),
+            series=st.series.at[upd].set(series1, mode="drop"),
+            sizes=st.sizes.at[upd].set(sizes1, mode="drop"),
+            payload=st.payload.at[upd].set(pay1, mode="drop"),
         )
-        out = StepOut(slot=slot, ready=count1 == top_n, new_flow=is_new,
-                      evicted=evict, arv_intv=arv_intv)
+        out = StepOut(slot=upd, ready=k & (count1 == top_n), new_flow=k & is_new,
+                      evicted=k & evict, arv_intv=jnp.where(k, arv_intv, 0))
         return st1, out
 
-    return lax.scan(step, state, packets)
+    return lax.scan(step, state, (packets, keep))
 
 
 def release_flows(state: TrackerState, slots: jax.Array) -> TrackerState:

@@ -22,15 +22,93 @@ overflow it raises instead of wrapping into negative inter-arrival times.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterator, Optional
+from typing import Iterator, NamedTuple, Optional
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.flow_tracker import PacketBatch, hash_slot_scalar
 
 _TS_MAX = 2**31 - 1  # PacketBatch.ts is int32 microseconds
+
+
+# ---------------------------------------------------------------------------
+# Hash partitioning (multi-lane serving)
+# ---------------------------------------------------------------------------
+
+def shard_of(tuple_hash, num_shards: int):
+    """Lane assignment: ``tuple_hash % num_shards`` through uint32, so a
+    flow's packets always land in the same shard (no cross-shard flow state)
+    and host/device agree on negative int32 hashes.  Works on jnp arrays,
+    numpy arrays and python ints alike."""
+    if isinstance(tuple_hash, (int, np.integer)):
+        return int((int(tuple_hash) & 0xFFFFFFFF) % num_shards)
+    if isinstance(tuple_hash, np.ndarray):
+        return (tuple_hash.astype(np.uint32) % np.uint32(num_shards)).astype(np.int32)
+    return (tuple_hash.astype(jnp.uint32) % jnp.uint32(num_shards)).astype(jnp.int32)
+
+
+class ShardedBatch(NamedTuple):
+    """One dispatch round of a hash-partitioned microbatch (static shapes,
+    S = num_shards, C = per-lane capacity).
+
+    Rows with ``keep == False`` are padding (zeroed packets, ``src == P``):
+    the tracker lanes drop them via the keep mask and output merges drop them
+    via the out-of-range ``src`` scatter."""
+
+    shards: PacketBatch  # (S, C) leaves — per-lane packets, arrival order
+    keep: jax.Array  # (S, C) bool — row holds a real packet
+    src: jax.Array  # (S, C) int32 — original batch index (P for padding)
+
+
+def partition_batch(batch: PacketBatch, num_shards: int, *,
+                    lane_batch: Optional[int] = None) -> list[ShardedBatch]:
+    """Hash-partition one microbatch into ``num_shards`` lanes
+    (``shard_of(tuple_hash)``), preserving per-lane arrival order.
+
+    Conservation contract (property-tested): every input packet appears in
+    exactly one shard of exactly one round with its keep bit set, at the lane
+    ``shard_of`` names; padding rows are zeroed with ``src == P``.
+
+    ``lane_batch`` is the per-lane capacity C.  The default (``None``) is the
+    full batch size — skew-proof, always a single round.  A smaller C trades
+    padding for rounds: when hash skew overfills a lane, the overflow spills
+    into further :class:`ShardedBatch` rounds (each lane's FIFO is split into
+    C-sized windows), and the caller dispatches the rounds in order — the
+    tracker merge is sequential-composable, so the result is bit-exact to the
+    single-round path."""
+    n = int(np.asarray(batch.ts).shape[0])
+    if num_shards <= 0:
+        raise ValueError(f"num_shards must be positive, got {num_shards}")
+    cap = n if lane_batch is None else int(lane_batch)
+    if not 0 < cap <= n:
+        raise ValueError(f"lane_batch must be in [1, {n}], got {cap}")
+    arrays = [np.asarray(a) for a in batch]
+    shard = shard_of(np.asarray(batch.tuple_hash), num_shards)
+    lanes = [np.flatnonzero(shard == s) for s in range(num_shards)]
+    rounds = max(1, -(-max((len(ix) for ix in lanes), default=0) // cap))
+
+    out = []
+    for r in range(rounds):
+        keep = np.zeros((num_shards, cap), bool)
+        src = np.full((num_shards, cap), n, np.int32)
+        for s, ix in enumerate(lanes):
+            window = ix[r * cap:(r + 1) * cap]
+            keep[s, : len(window)] = True
+            src[s, : len(window)] = window
+        take = np.minimum(src, n - 1)  # padding rows read row n-1, then zeroed
+
+        def gather(a):
+            g = a[take]
+            return jnp.asarray(np.where(
+                keep.reshape(keep.shape + (1,) * (g.ndim - 2)), g, 0))
+
+        out.append(ShardedBatch(
+            shards=PacketBatch(*(gather(a) for a in arrays)),
+            keep=jnp.asarray(keep), src=jnp.asarray(src)))
+    return out
 
 
 @dataclass(frozen=True)

@@ -125,6 +125,30 @@ def shardings_for(
 
 
 # ---------------------------------------------------------------------------
+# Serving-lane shardings (the pipeline's `lanes` mesh axis)
+# ---------------------------------------------------------------------------
+
+LANES_AXIS = "lanes"
+
+
+def lanes_spec(extra_dims: int = 0) -> P:
+    """PartitionSpec for a lane-stacked array: dim0 over ``lanes``, the rest
+    replicated.  Every per-shard pipeline tensor (TrackerState banks, packet
+    lanes, keep masks) is stacked on dim0, so one spec shape fits all."""
+    return P(LANES_AXIS, *([None] * extra_dims))
+
+
+def lanes_shardings(mesh: Mesh, tree_abstract: Any) -> Any:
+    """NamedShardings placing every leaf's dim0 on the ``lanes`` axis — used
+    to pre-place the per-shard tracker banks so the shard_map'd step never
+    reshards its carried state."""
+    def one(aval):
+        return NamedSharding(mesh, lanes_spec(len(aval.shape) - 1))
+
+    return jax.tree.map(one, tree_abstract)
+
+
+# ---------------------------------------------------------------------------
 # Activation / batch shardings
 # ---------------------------------------------------------------------------
 

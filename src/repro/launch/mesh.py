@@ -26,6 +26,21 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
+def make_lanes_mesh(num_lanes: int):
+    """1-D ``lanes`` mesh over the first ``num_lanes`` local devices — the
+    serving pipeline's parallel-lane axis (paper §2.2: parallel extractor
+    lanes over the multi-bank memory fabric).  Unlike the production meshes
+    this may use a subset of the devices: lanes are a serving concept, not a
+    training topology."""
+    import numpy as np
+
+    devices = jax.devices()
+    if num_lanes > len(devices):
+        raise ValueError(f"need {num_lanes} devices for a lanes mesh, "
+                         f"have {len(devices)}")
+    return jax.sharding.Mesh(np.asarray(devices[:num_lanes]), ("lanes",))
+
+
 def make_host_mesh(data: int = 2, model: int = 4, pod: int = 0):
     """Small mesh for CPU integration tests (requires the host-device flag)."""
     if pod:

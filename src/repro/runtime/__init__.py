@@ -45,6 +45,7 @@ def __getattr__(name: str):
 from repro.runtime.routing import (
     Route,
     RouteRecord,
+    lane_scope,
     mxu_utilization,
     name_scope,
     record_routes,
@@ -65,6 +66,7 @@ __all__ = [
     "calibrate",
     "current_runtime",
     "fit_crossover",
+    "lane_scope",
     "load_calibration",
     "measure_crossover",
     "mxu_utilization",

@@ -53,6 +53,28 @@ def pallas_available() -> bool:
         return False
 
 
+@lru_cache(maxsize=None)
+def device_count() -> int:
+    """Number of addressable local devices; 1 on failure.  Forced host
+    platforms (``--xla_force_host_platform_device_count``) count — that is
+    exactly how the lane tests/benchmarks exercise ``shard_map`` on CPU."""
+    try:
+        import jax
+
+        return jax.local_device_count()
+    except Exception:
+        return 1
+
+
+def lanes_backend(num_lanes: int) -> str:
+    """How the sharded pipeline should run its parallel lanes on this host:
+    ``"shard_map"`` when one device per lane exists (each lane's tracker bank
+    lives on its own device, the paper's multi-bank memory fabric),
+    ``"vmap"`` otherwise (single-device hosts batch the lanes — for the scan
+    tracker this still cuts the serial depth to the per-lane capacity)."""
+    return "shard_map" if 1 < num_lanes <= device_count() else "vmap"
+
+
 def is_accelerator() -> bool:
     """True when running on a real TPU/GPU backend (not host emulation)."""
     return backend() in _ACCELERATOR_BACKENDS

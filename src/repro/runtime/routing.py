@@ -70,6 +70,16 @@ def name_scope(label: str) -> Iterator[None]:
         _name_scope.reset(token)
 
 
+@contextmanager
+def lane_scope(lane: int) -> Iterator[None]:
+    """:func:`name_scope` for one serving lane (``lane<i>/``) — the sharded
+    pipeline traces each lane's engines under its own scope, so
+    ``RoutePlan.scoped(f"lane{i}")`` extracts any single lane's placement
+    from the composite multi-lane plan."""
+    with name_scope(f"lane{lane}"):
+        yield
+
+
 def systolic_utilization(m: int, k: int, n: int, array: int) -> float:
     """The paper's utilization definition (§3.2.3): useful MACs over
     array-slots x stream-cycles for an (m,k)x(k,n) matmul on an array x array

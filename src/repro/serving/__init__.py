@@ -12,3 +12,4 @@ from repro.serving.pipeline import (
     PipelineStats,
     PipelineStepOutput,
 )
+from repro.serving.sharded import LANE_BACKENDS, ShardedOctopusPipeline

@@ -118,7 +118,14 @@ class PipelineStepOutput(NamedTuple):
 
 @dataclass
 class PipelineStats:
-    """Sustained-loop counters (wall time covers the fused device dispatch)."""
+    """Sustained-loop counters, shared by the single-lane and sharded
+    pipelines.  All mutation goes through :meth:`record_dispatch`, which
+    counts per *actual* device dispatch: ``packets`` is the number of real
+    packets ingested (a sharded dispatch also moves ``padded`` masked lane
+    rows — those are deliberately not packets, so ``pkt_per_s`` stays an
+    honest wire-rate), ``steps`` is pipeline steps (a chunked dispatch
+    advances ``scan_len`` of them), ``dispatches`` is host->device round
+    trips (a multi-round sharded step can issue several)."""
 
     steps: int = 0
     total_s: float = 0.0
@@ -126,7 +133,25 @@ class PipelineStats:
     flows: int = 0  # ready flows emitted + classified
     new_flows: int = 0
     evicted: int = 0
-    dispatches: int = 0  # host->device round-trips (== steps iff scan_len 1)
+    dispatches: int = 0  # host->device round-trips (chunking lowers it below
+    # steps; sharded overflow rounds raise it above)
+    padded: int = 0  # dispatched-but-masked lane rows (sharding skew cost)
+
+    def record_dispatch(self, dt: float, *, packets: int, steps: int = 1,
+                        dispatches: int = 1, flows: int = 0,
+                        new_flows: int = 0, evicted: int = 0,
+                        padded: int = 0) -> None:
+        """Fold one timed dispatch (or fused multi-step chunk) into the
+        counters.  ``packets`` must be the real packet count — callers that
+        dispatch padded lanes pass the keep-mask total, not the lane shape."""
+        self.total_s += dt
+        self.packets += packets
+        self.steps += steps
+        self.dispatches += dispatches
+        self.flows += flows
+        self.new_flows += new_flows
+        self.evicted += evicted
+        self.padded += padded
 
     @property
     def pkt_per_s(self) -> float:
@@ -139,6 +164,13 @@ class PipelineStats:
     @property
     def step_us(self) -> float:
         return self.total_s / self.steps * 1e6 if self.steps else float("nan")
+
+    @property
+    def dispatch_us(self) -> float:
+        """Wall time per host->device round trip — the latency the chunked /
+        sharded dispatch modes actually amortize (``step_us`` divides by
+        pipeline steps, which a fused chunk advances several at a time)."""
+        return self.total_s / self.dispatches * 1e6 if self.dispatches else float("nan")
 
 
 class OctopusPipeline:
@@ -168,32 +200,55 @@ class OctopusPipeline:
             fx.check_default_program(self.program)  # fail at construction
         self.rules = decisions.RuleTable()  # the switch-facing table (step 6)
         self.stats = PipelineStats()
-        self.state = ft.init_state(cfg.table_size, cfg.top_n, cfg.top_k,
-                                   cfg.pay_bytes)
+        self.state = self._fresh_state()
         self.trace_count = 0  # bumps only when a jit entry point re-traces
         self._step_warmed = False
         self._step_fn = jax.jit(self._step, donate_argnums=(0,))
         self._chunk_fn = jax.jit(self._chunk, donate_argnums=(0,))
 
     # ------------------------------------------------------------ traced core
-    def _step_core(self, state: ft.TrackerState,
-                   packets: ft.PacketBatch) -> tuple[ft.TrackerState,
-                                                     PipelineStepOutput]:
-        """Steps 2-5 as one traced function (no trace counting — both jit
-        entry points share it)."""
+    def _fresh_state(self) -> ft.TrackerState:
+        """State factory shared by construction, warmup scratch and reset —
+        overridable (the sharded pipeline stacks per-lane banks here)."""
+        return ft.init_state(self.cfg.table_size, self.cfg.top_n,
+                             self.cfg.top_k, self.cfg.pay_bytes)
+
+    def _track(self, state: ft.TrackerState, packets: ft.PacketBatch,
+               keep: Optional[jax.Array] = None, *,
+               fallback: str = "auto") -> tuple[ft.TrackerState,
+                                                jax.Array, jax.Array]:
+        """Step 2 only: merge one (optionally masked) microbatch into the
+        tracker under ``cfg.tracker``.  Returns (state, new_flows, evicted) —
+        the merge half of the lane contract, dispatched on its own by the
+        sharded pipeline's overflow rounds.  ``fallback`` is forwarded to
+        the segmented tracker's collision branch (vmapped callers hoist it)."""
         if self.cfg.tracker == "segmented":
             state, seg = fx.segmented_update(
                 state, packets, self.program, top_n=self.cfg.top_n,
                 use_pallas=self.runtime.use_pallas,
-                interpret=self.runtime.interpret)
-            new_flows, evicted = seg.new_flows, seg.evicted
-        else:
-            state, outs = ft.process_packets(state, packets, self.program,
-                                             top_n=self.cfg.top_n)
-            new_flows = outs.new_flow.sum().astype(jnp.int32)
-            evicted = outs.evicted.sum().astype(jnp.int32)
-        state, drained = ft.drain_ready(state, top_n=self.cfg.top_n,
-                                        max_ready=self.cfg.max_ready)
+                interpret=self.runtime.interpret, keep=keep,
+                fallback=fallback)
+            return state, seg.new_flows, seg.evicted
+        state, outs = ft.process_packets(state, packets, self.program,
+                                         top_n=self.cfg.top_n, keep=keep)
+        return (state, outs.new_flow.sum().astype(jnp.int32),
+                outs.evicted.sum().astype(jnp.int32))
+
+    def _lane_core(self, state: ft.TrackerState, packets: ft.PacketBatch,
+                   keep: Optional[jax.Array] = None, *,
+                   max_ready: Optional[int] = None, fallback: str = "auto"
+                   ) -> tuple[ft.TrackerState, PipelineStepOutput]:
+        """Steps 2-5 for ONE lane, the shard-shaped step contract: merge the
+        (optionally keep-masked) packets, drain up to ``max_ready`` ready
+        flows (the global budget, or one lane's split of it), run both
+        engines, decide.  The single-lane pipeline calls it with the full
+        batch and budget; the sharded pipeline vmaps / shard_maps it across
+        hash-partitioned lanes."""
+        state, new_flows, evicted = self._track(state, packets, keep,
+                                                fallback=fallback)
+        state, drained = ft.drain_ready(
+            state, top_n=self.cfg.top_n,
+            max_ready=self.cfg.max_ready if max_ready is None else max_ready)
         pkt_logits = self.packet_engine.fn(self.packet_engine.params,
                                            packet_meta_features(packets))
         flow_x = self.flow_engine.prep(drained.series, drained.payload)
@@ -207,6 +262,13 @@ class OctopusPipeline:
             new_flows=new_flows,
             evicted=evicted,
         )
+
+    def _step_core(self, state: ft.TrackerState,
+                   packets: ft.PacketBatch) -> tuple[ft.TrackerState,
+                                                     PipelineStepOutput]:
+        """Steps 2-5 as one traced function (no trace counting — both jit
+        entry points share it): the lane core at full batch + budget."""
+        return self._lane_core(state, packets)
 
     def _step(self, state: ft.TrackerState,
               packets: ft.PacketBatch) -> tuple[ft.TrackerState, PipelineStepOutput]:
@@ -228,8 +290,7 @@ class OctopusPipeline:
         ``scan_len > 1``, else the single-step path; if a ``run`` later hits
         a partial final chunk, the single-step path is warmed on the spot —
         outside the timed region, so stats never include compilation."""
-        scratch = ft.init_state(self.cfg.table_size, self.cfg.top_n,
-                                self.cfg.top_k, self.cfg.pay_bytes)
+        scratch = self._fresh_state()
         if self.cfg.scan_len > 1:
             stacked = jax.tree_util.tree_map(
                 lambda a: jnp.broadcast_to(a, (self.cfg.scan_len,) + a.shape),
@@ -245,8 +306,7 @@ class OctopusPipeline:
         timing window."""
         if self._step_warmed:
             return
-        scratch = ft.init_state(self.cfg.table_size, self.cfg.top_n,
-                                self.cfg.top_k, self.cfg.pay_bytes)
+        scratch = self._fresh_state()
         _, out = self._step_fn(scratch, self._zero_batch())
         jax.block_until_ready(out)
         self._step_warmed = True
@@ -295,15 +355,31 @@ class OctopusPipeline:
             np.asarray(out.drained.mask), np.asarray(out.drained.tuple_id),
             np.asarray(out.flow_actions), np.asarray(out.flow_cls))
 
-        s = self.stats
-        s.steps += 1
-        s.dispatches += 1
-        s.total_s += dt
-        s.packets += n
-        s.flows += n_flows
-        s.new_flows += int(out.new_flows)
-        s.evicted += int(out.evicted)
+        self.stats.record_dispatch(dt, packets=n, flows=n_flows,
+                                   new_flows=int(out.new_flows),
+                                   evicted=int(out.evicted))
         return out
+
+    def _chunk_feedback(self, batches: Sequence[ft.PacketBatch],
+                        out: PipelineStepOutput) -> int:
+        """Step 6 for one fused chunk (stacked outputs, leading step axis),
+        applied in step order so later verdicts overwrite earlier — shared by
+        the single-lane and sharded chunked dispatches.  Returns the number
+        of emitted flows.  The hashes come from the host-resident ``batches``;
+        reading them back from the stacked device arrays would add a
+        device->host transfer per chunk."""
+        hashes = np.stack([np.asarray(b.tuple_hash) for b in batches])
+        pkt_actions = np.asarray(out.pkt_actions)
+        masks = np.asarray(out.drained.mask)
+        tuple_ids = np.asarray(out.drained.tuple_id)
+        flow_actions = np.asarray(out.flow_actions)
+        flow_cls = np.asarray(out.flow_cls)
+        n_flows = 0
+        for j in range(len(batches)):
+            n_flows += self._feedback(hashes[j], pkt_actions[j], masks[j],
+                                      tuple_ids[j], flow_actions[j],
+                                      flow_cls[j])
+        return n_flows
 
     def step_many(self, batches: Sequence[ft.PacketBatch]) -> PipelineStepOutput:
         """Run exactly ``scan_len`` microbatches as ONE device dispatch
@@ -325,28 +401,11 @@ class OctopusPipeline:
         jax.block_until_ready((self.state, out))
         dt = time.perf_counter() - t0
 
-        # host-side stack: the hashes were host-resident in `batches`; reading
-        # them back from `stacked` would add a device->host transfer per chunk
-        hashes = np.stack([np.asarray(b.tuple_hash) for b in batches])
-        pkt_actions = np.asarray(out.pkt_actions)
-        masks = np.asarray(out.drained.mask)
-        tuple_ids = np.asarray(out.drained.tuple_id)
-        flow_actions = np.asarray(out.flow_actions)
-        flow_cls = np.asarray(out.flow_cls)
-        n_flows = 0
-        for j in range(L):  # step order — later verdicts overwrite earlier
-            n_flows += self._feedback(hashes[j], pkt_actions[j], masks[j],
-                                      tuple_ids[j], flow_actions[j],
-                                      flow_cls[j])
-
-        s = self.stats
-        s.steps += L
-        s.dispatches += 1
-        s.total_s += dt
-        s.packets += L * self.cfg.batch_size
-        s.flows += n_flows
-        s.new_flows += int(np.asarray(out.new_flows).sum())
-        s.evicted += int(np.asarray(out.evicted).sum())
+        n_flows = self._chunk_feedback(batches, out)
+        self.stats.record_dispatch(
+            dt, packets=L * self.cfg.batch_size, steps=L, flows=n_flows,
+            new_flows=int(np.asarray(out.new_flows).sum()),
+            evicted=int(np.asarray(out.evicted).sum()))
         return out
 
     def run(self, traffic: Iterable[ft.PacketBatch],
@@ -379,8 +438,7 @@ class OctopusPipeline:
 
     def reset(self) -> None:
         """Fresh table, rule set and counters (compiled dispatches are kept)."""
-        self.state = ft.init_state(self.cfg.table_size, self.cfg.top_n,
-                                   self.cfg.top_k, self.cfg.pay_bytes)
+        self.state = self._fresh_state()
         self.rules = decisions.RuleTable()
         self.stats = PipelineStats()
 

@@ -1,0 +1,422 @@
+"""Sharded multi-lane serving pipeline (paper §2.2 / §4: parallel extractor
+lanes over a multi-bank memory fabric).
+
+:class:`ShardedOctopusPipeline` horizontally scales the streaming loop by
+hash-partitioning incoming packets into ``num_shards`` lanes
+(``shard = tuple_hash % num_shards`` — a flow's packets always land in the
+same shard, so there is **no cross-shard flow state**), running each lane's
+step core over its own :class:`~repro.core.flow_tracker.TrackerState` bank,
+and merging the per-lane drain results into one masked emission, so
+``decide`` and the rule-table feedback are unchanged downstream.
+
+Lane execution backend (selected through ``repro.runtime.platform``):
+
+  * ``"shard_map"`` — one device per lane on a ``lanes`` mesh axis
+    (:func:`repro.launch.mesh.make_lanes_mesh`): each lane's tracker bank
+    lives on its own device, the software shape of the paper's per-bank
+    extractor lanes.
+  * ``"vmap"``      — single-device fallback: lanes are batched.  For the
+    ``"scan"`` tracker this still cuts the sequential depth from the global
+    batch to the per-lane capacity (``vmap`` of a ``lax.scan`` is one scan
+    with a batched body), which is where the CPU-smoke scaling comes from.
+
+Exactness contract (differentially tested against the single-lane oracle in
+``tests/test_sharded.py``): whenever (a) flows that share a table slot also
+share a shard — always true under collision-free traffic, and for any
+same-shard collision — and (b) the drain budget keeps up with the ready rate
+(no lane ever holds back a ready flow: the global ``max_ready`` splits into
+``max_ready / num_shards`` per lane, so a backlogged lane drains later than
+the oracle's global lowest-slots-first order would, shifting the emitted
+count/feature snapshot), the union of drained flows, the residual per-shard
+table contents, and every per-flow decision are bit-identical to
+:class:`~repro.serving.pipeline.OctopusPipeline` consuming the same stream.
+The differential tests assert the no-backlog precondition on both sides
+instead of trusting it.
+Each lane keeps a full ``table_size`` bank with the *same* slot mapping as
+the single-lane table, so a flow's slot number is shard-invariant; what a
+lane cannot see is an eviction by a flow of another shard, which is exactly
+the cross-shard collision case excluded above.
+
+Skew handling: per-lane capacity (``lane_batch``) defaults to the full
+``batch_size`` — skew-proof, one fused dispatch per step.  A smaller
+``lane_batch`` trades padding for rounds: overflowing lanes spill into
+merge-only rounds ahead of the fused drain step
+(:func:`repro.data.traffic.partition_batch` splits each lane's FIFO into
+capacity-sized windows; the tracker merge composes sequentially, so the
+result stays bit-exact and the drain still happens once per global batch).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental.shard_map import shard_map
+
+from repro.core import decisions
+from repro.core import feature_extractor as fx
+from repro.core import flow_tracker as ft
+from repro.core.feature_extractor import packet_meta_features
+from repro.data.traffic import ShardedBatch, partition_batch, shard_of
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_lanes_mesh
+from repro.runtime import RoutePlan, RuntimeConfig, lane_scope, name_scope, platform
+from repro.serving.pipeline import (
+    OctopusPipeline,
+    PipelineConfig,
+    PipelineStepOutput,
+)
+
+LANE_BACKENDS = ("vmap", "shard_map")
+
+
+class ShardedOctopusPipeline(OctopusPipeline):
+    """Hash-partitioned multi-lane :class:`OctopusPipeline`.
+
+    Same public surface as the single-lane pipeline — ``step`` takes the
+    same global ``batch_size`` microbatch and returns a merged
+    :class:`PipelineStepOutput` with identical shapes (``pkt_actions`` in
+    original batch order; ``max_ready`` drained rows = ``num_shards`` lanes
+    × ``max_ready / num_shards`` budget each) — so the differential harness
+    can drive both from one seeded :class:`~repro.data.traffic.TrafficGenerator`.
+    """
+
+    def __init__(self, packet_params: Any, flow_params: Any,
+                 cfg: PipelineConfig = PipelineConfig(), *,
+                 num_shards: int,
+                 lane_batch: Optional[int] = None,
+                 backend: Optional[str] = None,
+                 config: Optional[RuntimeConfig] = None,
+                 program: Optional[jax.Array] = None):
+        if num_shards <= 0:
+            raise ValueError(f"num_shards must be positive, got {num_shards}")
+        if cfg.max_ready % num_shards:
+            raise ValueError(
+                f"max_ready={cfg.max_ready} must divide evenly into "
+                f"num_shards={num_shards} lane budgets")
+        self.num_shards = num_shards
+        self.lane_ready = cfg.max_ready // num_shards
+        self.lane_batch = cfg.batch_size if lane_batch is None else int(lane_batch)
+        if not 0 < self.lane_batch <= cfg.batch_size:
+            raise ValueError(f"lane_batch must be in [1, {cfg.batch_size}], "
+                             f"got {self.lane_batch}")
+        if cfg.scan_len > 1 and self.lane_batch != cfg.batch_size:
+            raise ValueError("scan_len > 1 needs the skew-proof lane_batch "
+                             "== batch_size (overflow rounds are dispatched "
+                             "per step, not scanned)")
+        self.backend = backend if backend is not None else \
+            platform.lanes_backend(num_shards)
+        if self.backend not in LANE_BACKENDS:
+            raise ValueError(f"backend must be one of {LANE_BACKENDS}, "
+                             f"got {self.backend!r}")
+        # the mesh must exist before super().__init__ constructs the state
+        # through the _fresh_state hook
+        self.mesh = make_lanes_mesh(num_shards) \
+            if self.backend == "shard_map" else None
+        super().__init__(packet_params, flow_params, cfg, config=config,
+                         program=program)
+        self._step_fn = jax.jit(self._sharded_step, donate_argnums=(0,))
+        self._chunk_fn = jax.jit(self._sharded_chunk, donate_argnums=(0,))
+        self._merge_fn = jax.jit(self._sharded_merge, donate_argnums=(0,))
+        self._merge_warmed = False
+
+    # ----------------------------------------------------------- lane plumbing
+    def _fresh_state(self) -> ft.TrackerState:
+        """Stacked per-lane tracker banks (leading ``num_shards`` axis), each
+        a full ``table_size`` table so slot numbering is shard-invariant.
+        Under shard_map the banks are pre-placed on the ``lanes`` axis so the
+        carried state never reshards."""
+        one = super()._fresh_state()
+        stacked = jax.tree_util.tree_map(
+            lambda a: jnp.tile(a[None], (self.num_shards,) + (1,) * a.ndim), one)
+        if self.mesh is not None:
+            stacked = jax.device_put(
+                stacked, shd.lanes_shardings(self.mesh, stacked))
+        return stacked
+
+    def _over_lanes(self, fn):
+        """Map a per-lane function over the leading shard axis of every
+        argument: ``vmap`` on single-device hosts, ``shard_map`` on the
+        ``lanes`` mesh.  Under shard_map each device holds exactly one lane
+        (local leading block of size 1), which is squeezed away so the lane
+        body runs *unbatched* — its table updates stay dynamic-update-slices
+        (in place) instead of vmap's batched scatters, which is where the
+        per-device lanes win their throughput."""
+        if self.backend == "vmap":
+            return jax.vmap(fn)
+
+        def body(*args):
+            out = fn(*jax.tree_util.tree_map(lambda x: x[0], args))
+            return jax.tree_util.tree_map(lambda x: x[None], out)
+
+        spec = shd.lanes_spec()
+        return shard_map(body, mesh=self.mesh, in_specs=spec, out_specs=spec)
+
+    def _merge_out(self, outs: PipelineStepOutput,
+                   src: jax.Array) -> PipelineStepOutput:
+        """Per-lane outputs (leading ``num_shards`` axis) -> one merged
+        step output with the single-lane shapes: packet actions scattered
+        back to original batch order (padding rows carry ``src ==
+        batch_size`` and drop), lane drain rows concatenated into the global
+        ``max_ready`` emission."""
+        B = self.cfg.batch_size
+        pkt_actions = jnp.zeros((B,), jnp.int32).at[src.reshape(-1)].set(
+            outs.pkt_actions.reshape(-1), mode="drop")
+        flat = lambda a: a.reshape((self.cfg.max_ready,) + a.shape[2:])
+        return PipelineStepOutput(
+            pkt_actions=pkt_actions,
+            drained=jax.tree_util.tree_map(flat, outs.drained),
+            flow_actions=flat(outs.flow_actions),
+            flow_cls=flat(outs.flow_cls),
+            new_flows=outs.new_flows.sum().astype(jnp.int32),
+            evicted=outs.evicted.sum().astype(jnp.int32),
+        )
+
+    # ------------------------------------------------------------ traced cores
+    def _lanes_cond(self, make_lane, states, shards, keep):
+        """Run ``make_lane(fallback)`` over every lane.  For the segmented
+        tracker under vmap, the collision-fallback branch is hoisted out
+        here: a vmapped ``lax.cond`` lowers to a select that runs the scan
+        oracle on every batch, so instead ONE cond on "any lane collides"
+        picks between the two statically-selected vmapped variants —
+        collision-free batches (the common case) never touch the scan."""
+        if self.cfg.tracker != "segmented" or self.backend != "vmap":
+            return self._over_lanes(make_lane("auto"))(states, shards, keep)
+        collides = jax.vmap(
+            lambda p, k: fx.batch_collisions(p, self.cfg.table_size, k)
+        )(shards, keep).any()
+        return lax.cond(
+            collides,
+            lambda s, p, k: self._over_lanes(make_lane("always"))(s, p, k),
+            lambda s, p, k: self._over_lanes(make_lane("never"))(s, p, k),
+            states, shards, keep)
+
+    def _sharded_core(self, states: ft.TrackerState, shards: ft.PacketBatch,
+                      keep: jax.Array, src: jax.Array
+                      ) -> tuple[ft.TrackerState, PipelineStepOutput]:
+        """One full sharded step: every lane runs the shard-shaped
+        ``_lane_core`` (merge + lane-budget drain + both engines + decide)
+        on its partition, then the lane outputs merge."""
+        def make_lane(fb):
+            return lambda st, p, k: self._lane_core(
+                st, p, k, max_ready=self.lane_ready, fallback=fb)
+
+        states, outs = self._lanes_cond(make_lane, states, shards, keep)
+        return states, self._merge_out(outs, src)
+
+    def _sharded_step(self, states, shards, keep, src):
+        self.trace_count += 1  # python side effect: runs per trace, not per call
+        return self._sharded_core(states, shards, keep, src)
+
+    def _sharded_chunk(self, states, shards, keep, src):
+        """``scan_len`` sharded steps in one dispatch (lockstep lanes only:
+        every scanned step is a single round)."""
+        self.trace_count += 1  # python side effect: runs per trace, not per call
+        return lax.scan(lambda st, xs: self._sharded_core(st, *xs),
+                        states, (shards, keep, src))
+
+    def _sharded_merge(self, states, shards, keep):
+        """Merge-only overflow round (step 2 + the per-packet engine): folds
+        one spill window into every lane's bank without draining — the drain
+        and flow engine run once per global batch, in the final round, so
+        multi-round steps stay bit-exact to the oracle."""
+        self.trace_count += 1  # python side effect: runs per trace, not per call
+
+        def make_lane(fb):
+            def lane(st, p, k):
+                st, new, ev = self._track(st, p, k, fallback=fb)
+                acts = decisions.decide_binary(
+                    self.packet_engine.fn(self.packet_engine.params,
+                                          packet_meta_features(p)))
+                return st, new, ev, acts
+
+            return lane
+
+        return self._lanes_cond(make_lane, states, shards, keep)
+
+    # -------------------------------------------------------------- host loop
+    def _partition(self, packets: ft.PacketBatch) -> list[ShardedBatch]:
+        lane_batch = None if self.lane_batch == self.cfg.batch_size \
+            else self.lane_batch
+        return partition_batch(packets, self.num_shards, lane_batch=lane_batch)
+
+    def _padded_rows(self, rounds: Sequence[ShardedBatch]) -> int:
+        """Masked lane rows this step will dispatch.  Pure arithmetic —
+        conservation guarantees the kept rows across all rounds are exactly
+        the global batch, so no device readback is needed on the hot loop."""
+        return (len(rounds) * self.num_shards * self.lane_batch
+                - self.cfg.batch_size)
+
+    def step(self, packets: ft.PacketBatch) -> PipelineStepOutput:
+        """One global microbatch through all lanes: partition by tuple-hash,
+        dispatch any overflow merge rounds, then the fused drain step; fold
+        the merged decisions into the rule table exactly like the single-lane
+        pipeline."""
+        n = self._check_batch(packets)
+        rounds = self._partition(packets)
+        pkt_merged = np.zeros((n,), np.int32) if len(rounds) > 1 else None
+
+        t0 = time.perf_counter()
+        total_new = total_ev = 0
+        for sb in rounds[:-1]:
+            self.state, new, ev, acts = self._merge_fn(self.state, sb.shards,
+                                                       sb.keep)
+            total_new += int(np.asarray(new).sum())
+            total_ev += int(np.asarray(ev).sum())
+            k = np.asarray(sb.keep)
+            pkt_merged[np.asarray(sb.src)[k]] = np.asarray(acts)[k]
+        last = rounds[-1]
+        self.state, out = self._step_fn(self.state, last.shards, last.keep,
+                                        last.src)
+        jax.block_until_ready((self.state, out))
+        dt = time.perf_counter() - t0
+        self._step_warmed = True
+
+        if pkt_merged is not None:  # overlay the final round's packet verdicts
+            pos = np.asarray(last.src)[np.asarray(last.keep)]
+            pkt_merged[pos] = np.asarray(out.pkt_actions)[pos]
+            out = out._replace(
+                pkt_actions=jnp.asarray(pkt_merged),
+                new_flows=jnp.int32(total_new + int(out.new_flows)),
+                evicted=jnp.int32(total_ev + int(out.evicted)))
+
+        n_flows = self._feedback(
+            np.asarray(packets.tuple_hash), np.asarray(out.pkt_actions),
+            np.asarray(out.drained.mask), np.asarray(out.drained.tuple_id),
+            np.asarray(out.flow_actions), np.asarray(out.flow_cls))
+
+        self.stats.record_dispatch(
+            dt, packets=n, dispatches=len(rounds), flows=n_flows,
+            new_flows=int(out.new_flows), evicted=int(out.evicted),
+            padded=self._padded_rows(rounds))
+        return out
+
+    def step_many(self, batches: Sequence[ft.PacketBatch]) -> PipelineStepOutput:
+        """Exactly ``scan_len`` global microbatches as one device dispatch
+        (``lax.scan`` over the fused sharded step — lockstep lanes, so every
+        scanned step is one round), rule-table feedback after the chunk in
+        step order, like the single-lane chunked path."""
+        L = self.cfg.scan_len
+        batches = list(batches)
+        if len(batches) != L:
+            raise ValueError(f"step_many needs exactly scan_len={L} "
+                             f"microbatches, got {len(batches)}")
+        if self.lane_batch != self.cfg.batch_size:
+            # multi-round partitions cannot stack into one scanned dispatch
+            # (overflow rounds would be dropped); the constructor pins
+            # scan_len == 1 for this mode, so the chunk is a single step —
+            # route it through step(), which dispatches every round
+            out = self.step(batches[0])
+            return jax.tree_util.tree_map(lambda a: jnp.asarray(a)[None], out)
+        for b in batches:
+            self._check_batch(b)
+        parts = [self._partition(b)[0] for b in batches]  # lockstep: 1 round
+        shards, keep, src = (jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                                    *leaves)
+                             for leaves in zip(*parts))
+
+        t0 = time.perf_counter()
+        self.state, out = self._chunk_fn(self.state, shards, keep, src)
+        jax.block_until_ready((self.state, out))
+        dt = time.perf_counter() - t0
+
+        n_flows = self._chunk_feedback(batches, out)
+        self.stats.record_dispatch(
+            dt, packets=L * self.cfg.batch_size, steps=L, flows=n_flows,
+            new_flows=int(np.asarray(out.new_flows).sum()),
+            evicted=int(np.asarray(out.evicted).sum()),
+            # parts holds one single-round partition PER STEP — padding is
+            # per step, not one multi-round step's worth
+            padded=sum(self._padded_rows([p]) for p in parts))
+        return out
+
+    def _zero_parts(self) -> ShardedBatch:
+        C, S, B = self.lane_batch, self.num_shards, self.cfg.batch_size
+        pkt = jax.tree_util.tree_map(
+            lambda a: jnp.zeros((S, C) + a.shape[1:], a.dtype),
+            self._zero_batch())
+        return ShardedBatch(shards=pkt, keep=jnp.zeros((S, C), bool),
+                            src=jnp.full((S, C), B, jnp.int32))
+
+    def warmup(self) -> None:
+        """Compile the dispatch paths ``run`` will use on throwaway state:
+        the chunked path when ``scan_len > 1``, else the fused step (plus the
+        merge-only round when a smaller ``lane_batch`` makes overflow rounds
+        possible)."""
+        scratch = self._fresh_state()
+        zb = self._zero_parts()
+        if self.cfg.scan_len > 1:
+            stacked = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (self.cfg.scan_len,) + a.shape),
+                zb)
+            _, out = self._chunk_fn(scratch, stacked.shards, stacked.keep,
+                                    stacked.src)
+            jax.block_until_ready(out)
+        else:
+            if self.lane_batch < self.cfg.batch_size:
+                scratch, *_ = self._merge_fn(scratch, zb.shards, zb.keep)
+                self._merge_warmed = True
+            _, out = self._step_fn(scratch, zb.shards, zb.keep, zb.src)
+            jax.block_until_ready(out)
+            self._step_warmed = True
+
+    def _warm_step(self) -> None:
+        if self._step_warmed:
+            return
+        scratch = self._fresh_state()
+        zb = self._zero_parts()
+        if self.lane_batch < self.cfg.batch_size and not self._merge_warmed:
+            scratch, *_ = self._merge_fn(scratch, zb.shards, zb.keep)
+            self._merge_warmed = True
+        _, out = self._step_fn(scratch, zb.shards, zb.keep, zb.src)
+        jax.block_until_ready(out)
+        self._step_warmed = True
+
+    # ------------------------------------------------------------- placement
+    def plan(self) -> RoutePlan:
+        """One RoutePlan across every lane's engines, each lane traced under
+        its own ``lane<i>/`` scope (``plan().scoped("lane0")`` extracts one
+        lane).  Shapes are per lane: the packet engine sees the lane capacity
+        ``lane_batch``, the flow engine the lane drain budget."""
+        def all_lanes(px: jax.Array, fx_: jax.Array):
+            out = []
+            for i in range(self.num_shards):
+                with lane_scope(i):
+                    with name_scope("pkt"):
+                        a = self.packet_engine.fn(self.packet_engine.params, px)
+                    with name_scope("flow"):
+                        b = self.flow_engine.fn(self.flow_engine.params, fx_)
+                out.append((a, b))
+            return out
+
+        return RoutePlan.trace(
+            all_lanes, self.packet_engine.abstract_input(self.lane_batch),
+            self.flow_engine.abstract_input(self.lane_ready),
+            config=self.runtime)
+
+    def explain(self) -> str:
+        """Placement report for the multi-lane step: the lane topology plus
+        the composite per-lane plan."""
+        plan = self.plan()
+        c = self.cfg
+        head = (f"ShardedOctopusPipeline: lanes={self.num_shards} "
+                f"backend={self.backend} lane_batch={self.lane_batch} "
+                f"lane_ready={self.lane_ready} batch={c.batch_size} "
+                f"max_ready={c.max_ready} flow_model={c.flow_model} "
+                f"table={c.table_size}x{self.num_shards} top_n={c.top_n} "
+                f"tracker={c.tracker} scan_len={c.scan_len}")
+        lines = [head, plan.explain()]
+        for i in range(self.num_shards):
+            sub = plan.scoped(f"lane{i}", strip=True)
+            pkt = sub.scoped("pkt")
+            flow = sub.scoped("flow")
+            lines.append(f"  lane{i}: {len(pkt)} pkt + {len(flow)} flow "
+                         f"matmuls, {sub.macs()} MACs")
+        return "\n".join(lines)
+
+
+__all__ = ["ShardedOctopusPipeline", "LANE_BACKENDS", "partition_batch",
+           "shard_of"]

@@ -75,6 +75,43 @@ def test_empty_batch_submit_does_not_skew_stats(mlp_params, cnn_params):
     assert p.stats.latency_us > 0 and p.stats.throughput > 0
 
 
+# -------------------------------------------------------------- PipelineStats
+
+def test_pipeline_stats_counts_packets_per_actual_dispatch():
+    """A fused chunk advances several steps in ONE dispatch; a sharded step
+    can issue several dispatches for ONE step.  The counters must keep those
+    axes apart so pkt_per_s / dispatch_us stay honest."""
+    from repro.serving import PipelineStats
+
+    s = PipelineStats()
+    s.record_dispatch(0.5, packets=4 * 32, steps=4)  # one scan_len=4 chunk
+    assert (s.steps, s.dispatches, s.packets) == (4, 1, 128)
+    s.record_dispatch(0.5, packets=32, dispatches=3)  # one 3-round sharded step
+    assert (s.steps, s.dispatches, s.packets) == (5, 4, 160)
+    assert s.pkt_per_s == 160 / 1.0
+    assert s.step_us == 1.0 / 5 * 1e6
+    assert s.dispatch_us == 1.0 / 4 * 1e6
+
+
+def test_pipeline_stats_padding_is_not_throughput():
+    """Sharded lanes move padded rows; those must never inflate pkt_per_s
+    (the wire only carried the real packets)."""
+    from repro.serving import PipelineStats
+
+    s = PipelineStats()
+    s.record_dispatch(1.0, packets=32, padded=96)  # 4 lanes x 32 capacity
+    assert s.packets == 32 and s.padded == 96
+    assert s.pkt_per_s == 32.0
+
+
+def test_pipeline_stats_empty_is_nan_and_zero():
+    from repro.serving import PipelineStats
+
+    s = PipelineStats()
+    assert s.pkt_per_s == 0.0 and s.flow_per_s == 0.0
+    assert math.isnan(s.step_us) and math.isnan(s.dispatch_us)
+
+
 # -------------------------------------------------------------------- engines
 
 def test_engines_are_pure_cores(mlp_params, cnn_params):

@@ -350,6 +350,38 @@ def test_no_retrace_after_warmup_and_state_sustained(params):
     assert pipe.stats.steps == 2 and pipe.stats.packets == 8 and pipe.stats.flows == 1
 
 
+def test_no_retrace_extends_to_sharded_step(params):
+    """The jit-cache-stability contract covers the sharded dispatch too: the
+    multi-lane step shares `_lane_core` with the single-lane `_step_core`,
+    compiles once at warmup, and every later step (including the donated
+    per-shard TrackerState carry) is a cache hit."""
+    from repro.serving import ShardedOctopusPipeline
+
+    cfg = PipelineConfig(batch_size=4, max_ready=2, flow_model="transformer",
+                         table_size=16, top_n=8, top_k=15, pay_bytes=16)
+    sh = ShardedOctopusPipeline(params["mlp"], params["transformer"], cfg,
+                                num_shards=2)
+    sh.warmup()
+    assert sh.trace_count == 1
+
+    h = 77
+    def batch(ts0):
+        return ft.PacketBatch(
+            ts=jnp.asarray([ts0 + 10 * i for i in range(4)], jnp.int32),
+            size=jnp.full((4,), 100, jnp.int32),
+            dir=jnp.zeros((4,), jnp.int32), flags=jnp.zeros((4,), jnp.int32),
+            proto=jnp.zeros((4,), jnp.int32),
+            tuple_hash=jnp.full((4,), h, jnp.int32),
+            payload=jnp.zeros((4, 16), jnp.int32))
+
+    out1 = sh.step(batch(100))
+    assert int(np.asarray(out1.drained.mask).sum()) == 0
+    out2 = sh.step(batch(140))  # per-shard state carried across dispatches
+    assert int(np.asarray(out2.drained.mask).sum()) == 1
+    assert sh.trace_count == 1  # no per-step retrace on the sharded path
+    assert sh.stats.steps == 2 and sh.stats.dispatches == 2
+
+
 def test_explain_reports_both_engines_from_one_plan(params):
     cfg = PipelineConfig(batch_size=32, max_ready=8, flow_model="cnn",
                          table_size=128)
