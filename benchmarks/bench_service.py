@@ -1,0 +1,119 @@
+"""Serving-frontend benchmark: N concurrent closed-loop clients driving one
+:class:`OctopusService` (queue -> coalesce -> pad-to-bucket -> masked
+dispatch), reporting sustained pkt/s and the p50/p99 end-to-end latency the
+clients actually observe.
+
+Each client is a seeded :class:`TrafficGenerator` with its own traffic mix —
+mice-heavy ports next to elephant-heavy ones, different microbatch sizes —
+so the coalescer sees the ragged, uneven arrivals the frontend exists for.
+``trace_count`` rides along in the derived column: flat across the run is
+the no-retrace-after-warmup proof under real concurrency.
+
+    PYTHONPATH=src python benchmarks/bench_service.py [--smoke]
+
+Rows land in ``benchmarks/run.py --json`` artifacts (CI bench-smoke), so the
+service's pkt/s / p99 trajectory is trackable across commits.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import row  # noqa: E402
+
+
+def _client_mixes(num_clients: int, batch: int, table_size: int):
+    """Heterogeneous per-client configs: alternating mice/elephant-heavy
+    mixes and staggered microbatch sizes (the ragged-arrival axis)."""
+    from repro.data.traffic import TrafficConfig
+
+    sizes = (batch // 2, batch, batch + batch // 4, batch // 4)
+    mixes = (0.05, 0.5, 0.125, 0.3)  # elephant_fraction per client, cycled
+    return [TrafficConfig(
+        batch_size=max(1, sizes[c % len(sizes)]),
+        active_flows=16, elephant_fraction=mixes[c % len(mixes)],
+        table_size=table_size, seed=100 + c, client_id=c)
+        for c in range(num_clients)]
+
+
+def _bench_one(num_clients: int, requests: int, batch: int, buckets,
+               table_size: int, num_shards: int = 0):
+    import jax
+
+    from repro.data.traffic import TrafficGenerator
+    from repro.models import paper_models
+    from repro.serving import (
+        OctopusPipeline,
+        OctopusService,
+        PipelineConfig,
+        ServiceConfig,
+        ShardedOctopusPipeline,
+        serve_stream,
+    )
+
+    cfg = PipelineConfig(batch_size=buckets[-1], max_ready=8,
+                         flow_model="cnn", table_size=table_size,
+                         tracker="segmented")
+    pkt_params = paper_models.init_paper_model("mlp", jax.random.PRNGKey(0))
+    flow_params = paper_models.init_paper_model("cnn", jax.random.PRNGKey(1))
+    if num_shards:
+        pipe = ShardedOctopusPipeline(pkt_params, flow_params, cfg,
+                                      num_shards=num_shards)
+    else:
+        pipe = OctopusPipeline(pkt_params, flow_params, cfg)
+    gens = [TrafficGenerator(c)
+            for c in _client_mixes(num_clients, batch, table_size)]
+
+    async def drive():
+        async with OctopusService(pipe, ServiceConfig(buckets=buckets)) as svc:
+            warm_traces = svc.trace_count
+            await asyncio.gather(*(
+                serve_stream(svc, g, requests=requests) for g in gens))
+            return svc, warm_traces
+
+    svc, warm_traces = asyncio.run(drive())
+    return svc, warm_traces
+
+
+def run(requests: int = 24, smoke: bool = False):
+    """Yield CSV rows (name,us_per_call,derived): one multi-client service
+    row per lane layout.  ``us_per_call`` is the client-observed p50 e2e."""
+    if smoke:
+        grid = [(4, min(requests, 12), 16, (32, 64), 256, 0)]
+    else:
+        grid = [(4, requests, 16, (32, 64, 128), 1024, 0),
+                (8, requests, 24, (64, 128, 256), 1024, 0),
+                (4, requests, 16, (32, 64, 128), 1024, 2)]
+    for num_clients, reqs, batch, buckets, table_size, num_shards in grid:
+        svc, warm_traces = _bench_one(num_clients, reqs, batch, buckets,
+                                      table_size, num_shards)
+        s = svc.stats
+        lanes = f"_s{num_shards}" if num_shards else ""
+        yield row(
+            f"service_cnn_c{num_clients}_b{batch}{lanes}", s.e2e.p50,
+            f"pkt_per_s={s.pkt_per_s:.0f};p99_e2e_us={s.e2e.p99:.0f};"
+            f"p99_wait_us={s.wait.p99:.0f};clients={num_clients};"
+            f"requests={s.served_requests};dispatches={s.dispatches};"
+            f"coalesced={s.coalesced};padded={s.padded};"
+            f"depth_hwm={s.depth_hwm};retraces={svc.trace_count - warm_traces}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="serving frontend benchmark")
+    ap.add_argument("--smoke", action="store_true",
+                    help="single small config for per-PR CI")
+    ap.add_argument("--requests", type=int, default=24,
+                    help="closed-loop requests per client")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    for r in run(requests=args.requests, smoke=args.smoke):
+        print(r)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

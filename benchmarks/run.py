@@ -40,6 +40,7 @@ def _suites(smoke: bool) -> list:
         bench_inventory,
         bench_kernels,
         bench_pipeline,
+        bench_service,
         bench_usecase1_mlp,
         bench_usecase3_transformer,
     )
@@ -52,6 +53,7 @@ def _suites(smoke: bool) -> list:
             ("collaborative(T6)", lambda: bench_collaborative.run(flows=200)),
             ("usecase3_transformer", lambda: bench_usecase3_transformer.run(flows=100)),
             ("pipeline(streaming)", lambda: bench_pipeline.run(smoke=True)),
+            ("service(frontend)", lambda: bench_service.run(smoke=True)),
         ]
     return [
         ("inventory(T4)", bench_inventory.run),
@@ -61,6 +63,7 @@ def _suites(smoke: bool) -> list:
         ("feature_extractor", bench_feature_extractor.run),
         ("kernels", bench_kernels.run),
         ("pipeline(streaming)", bench_pipeline.run),
+        ("service(frontend)", bench_service.run),
     ]
 
 

@@ -64,7 +64,8 @@ class ShardedBatch(NamedTuple):
 
 
 def partition_batch(batch: PacketBatch, num_shards: int, *,
-                    lane_batch: Optional[int] = None) -> list[ShardedBatch]:
+                    lane_batch: Optional[int] = None,
+                    keep: Optional[np.ndarray] = None) -> list[ShardedBatch]:
     """Hash-partition one microbatch into ``num_shards`` lanes
     (``shard_of(tuple_hash)``), preserving per-lane arrival order.
 
@@ -78,7 +79,13 @@ def partition_batch(batch: PacketBatch, num_shards: int, *,
     into further :class:`ShardedBatch` rounds (each lane's FIFO is split into
     C-sized windows), and the caller dispatches the rounds in order — the
     tracker merge is sequential-composable, so the result is bit-exact to the
-    single-round path."""
+    single-round path.
+
+    ``keep`` (optional bool mask over the batch) pre-drops rows before
+    partitioning: rows with ``keep == False`` land in no lane of no round,
+    exactly as if the batch held only the kept rows — the serving frontend's
+    bucket-padded batches partition this way, so padding never hashes into
+    lane 0.  The conservation contract then covers the kept rows only."""
     n = int(np.asarray(batch.ts).shape[0])
     if num_shards <= 0:
         raise ValueError(f"num_shards must be positive, got {num_shards}")
@@ -87,7 +94,13 @@ def partition_batch(batch: PacketBatch, num_shards: int, *,
         raise ValueError(f"lane_batch must be in [1, {n}], got {cap}")
     arrays = [np.asarray(a) for a in batch]
     shard = shard_of(np.asarray(batch.tuple_hash), num_shards)
-    lanes = [np.flatnonzero(shard == s) for s in range(num_shards)]
+    if keep is not None:
+        mask = np.asarray(keep, bool)
+        if mask.shape != (n,):
+            raise ValueError(f"keep must have shape ({n},), got {mask.shape}")
+        lanes = [np.flatnonzero((shard == s) & mask) for s in range(num_shards)]
+    else:
+        lanes = [np.flatnonzero(shard == s) for s in range(num_shards)]
     rounds = max(1, -(-max((len(ix) for ix in lanes), default=0) // cap))
 
     out = []
@@ -126,6 +139,7 @@ class TrafficConfig:
     table_size: int = 1024
     collision_free: bool = True  # no two *live* flows share a table slot
     seed: int = 0
+    client_id: int = 0  # stamped on the generator for multi-stream serving
 
 
 class _Flow:
@@ -159,6 +173,7 @@ class TrafficGenerator:
         if cfg.collision_free and cfg.active_flows > cfg.table_size:
             raise ValueError("collision_free needs active_flows <= table_size")
         self.cfg = cfg
+        self.client_id = cfg.client_id
         self.rng = np.random.default_rng(cfg.seed)
         self.clock = 0  # global microsecond clock (ts are non-decreasing)
         self.flows_started = 0
@@ -255,3 +270,31 @@ class TrafficGenerator:
 
     def __iter__(self) -> Iterator[PacketBatch]:
         return self.batches(None)
+
+
+def merge_streams(*gens: TrafficGenerator, seed: int = 0,
+                  steps: Optional[int] = None,
+                  tagged: bool = False) -> Iterator:
+    """Deterministically interleave N seeded generators into one stream.
+
+    Each yielded microbatch is pulled whole from one generator, chosen by a
+    dedicated ``seed``-keyed RNG — so the interleave order is stable across
+    runs (same seed + same generator configs => the same stream, batch for
+    batch), independent of each generator's own seed.  Conservation
+    (property-tested): every batch a generator produces appears exactly once
+    in the merged stream, in that generator's own order — the merge reorders
+    *across* clients, never within one.
+
+    ``tagged=True`` yields ``(client_id, PacketBatch)`` pairs (the serving
+    harness needs the attribution); the default yields bare batches so the
+    merged stream can drive ``OctopusPipeline.run`` directly.  ``steps``
+    bounds the total batch count (the generators are infinite)."""
+    if not gens:
+        raise ValueError("merge_streams needs at least one generator")
+    rng = np.random.default_rng(seed)
+    produced = 0
+    while steps is None or produced < steps:
+        g = gens[int(rng.integers(0, len(gens)))]
+        batch = g.next_batch()
+        yield (g.client_id, batch) if tagged else batch
+        produced += 1

@@ -7,9 +7,19 @@ from repro.serving.packet_path import (
     PathStats,
 )
 from repro.serving.pipeline import (
+    LatencyReservoir,
     OctopusPipeline,
     PipelineConfig,
     PipelineStats,
     PipelineStepOutput,
+)
+from repro.serving.service import (
+    ADMISSION_POLICIES,
+    OctopusService,
+    Rejected,
+    ServeResult,
+    ServiceConfig,
+    ServiceStats,
+    serve_stream,
 )
 from repro.serving.sharded import LANE_BACKENDS, ShardedOctopusPipeline

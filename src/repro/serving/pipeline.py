@@ -43,7 +43,7 @@ from __future__ import annotations
 
 import itertools
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Iterable, NamedTuple, Optional, Sequence
 
 import jax
@@ -116,6 +116,52 @@ class PipelineStepOutput(NamedTuple):
     evicted: jax.Array  # () int32 — stale flows recycled by collision
 
 
+class LatencyReservoir:
+    """Bounded ring-buffer sample for percentile latency reporting.
+
+    ``record_dispatch`` / the serving frontend feed every observed latency
+    in; only the most recent ``capacity`` samples are retained, so p50/p99
+    stay computable over an unbounded run without unbounded memory (the
+    paper's dataplane equivalent: a fixed histogram SRAM, not a packet log).
+    Idle reservoirs report ``nan`` — the ``PathStats.latency_us`` convention
+    (0.0 would read as an impossibly fast path)."""
+
+    __slots__ = ("capacity", "_buf", "_n")
+
+    def __init__(self, capacity: int = 1024):
+        if capacity <= 0:
+            raise ValueError(f"capacity must be positive, got {capacity}")
+        self.capacity = capacity
+        self._buf = np.empty(capacity, np.float64)
+        self._n = 0  # total added; the ring holds the last min(n, capacity)
+
+    def add(self, value: float) -> None:
+        self._buf[self._n % self.capacity] = value
+        self._n += 1
+
+    def __len__(self) -> int:
+        return min(self._n, self.capacity)
+
+    @property
+    def total_added(self) -> int:
+        return self._n
+
+    def percentile(self, q: float) -> float:
+        """q-th percentile (0-100) of the retained sample; ``nan`` when
+        nothing was recorded yet."""
+        if self._n == 0:
+            return float("nan")
+        return float(np.percentile(self._buf[: len(self)], q))
+
+    @property
+    def p50(self) -> float:
+        return self.percentile(50.0)
+
+    @property
+    def p99(self) -> float:
+        return self.percentile(99.0)
+
+
 @dataclass
 class PipelineStats:
     """Sustained-loop counters, shared by the single-lane and sharded
@@ -125,7 +171,12 @@ class PipelineStats:
     rows — those are deliberately not packets, so ``pkt_per_s`` stays an
     honest wire-rate), ``steps`` is pipeline steps (a chunked dispatch
     advances ``scan_len`` of them), ``dispatches`` is host->device round
-    trips (a multi-round sharded step can issue several)."""
+    trips (a multi-round sharded step can issue several).
+
+    Beyond the aggregate means (``dispatch_us``/``step_us``), every timed
+    dispatch region also lands one sample in a bounded
+    :class:`LatencyReservoir`, so tail latency (``p50_us``/``p99_us``) is
+    reportable over unbounded runs — idle stats report ``nan``."""
 
     steps: int = 0
     total_s: float = 0.0
@@ -136,6 +187,7 @@ class PipelineStats:
     dispatches: int = 0  # host->device round-trips (chunking lowers it below
     # steps; sharded overflow rounds raise it above)
     padded: int = 0  # dispatched-but-masked lane rows (sharding skew cost)
+    lat: LatencyReservoir = field(default_factory=LatencyReservoir)
 
     def record_dispatch(self, dt: float, *, packets: int, steps: int = 1,
                         dispatches: int = 1, flows: int = 0,
@@ -152,6 +204,7 @@ class PipelineStats:
         self.new_flows += new_flows
         self.evicted += evicted
         self.padded += padded
+        self.lat.add(dt * 1e6)  # one sample per timed region (us)
 
     @property
     def pkt_per_s(self) -> float:
@@ -171,6 +224,17 @@ class PipelineStats:
         sharded dispatch modes actually amortize (``step_us`` divides by
         pipeline steps, which a fused chunk advances several at a time)."""
         return self.total_s / self.dispatches * 1e6 if self.dispatches else float("nan")
+
+    @property
+    def p50_us(self) -> float:
+        """Median timed-dispatch wall time (``nan`` when idle)."""
+        return self.lat.p50
+
+    @property
+    def p99_us(self) -> float:
+        """99th-percentile timed-dispatch wall time (``nan`` when idle) —
+        the bounded-tail claim the serving frontend is measured against."""
+        return self.lat.p99
 
 
 class OctopusPipeline:
@@ -205,6 +269,8 @@ class OctopusPipeline:
         self._step_warmed = False
         self._step_fn = jax.jit(self._step, donate_argnums=(0,))
         self._chunk_fn = jax.jit(self._chunk, donate_argnums=(0,))
+        self._masked_fn = jax.jit(self._masked_step, donate_argnums=(0,))
+        self._warm_buckets: set[int] = set()  # bucket sizes compiled so far
 
     # ------------------------------------------------------------ traced core
     def _fresh_state(self) -> ft.TrackerState:
@@ -283,6 +349,18 @@ class OctopusPipeline:
         self.trace_count += 1  # python side effect: runs per trace, not per call
         return lax.scan(self._step_core, state, stacked)
 
+    def _masked_step(self, state: ft.TrackerState, packets: ft.PacketBatch,
+                     keep: jax.Array) -> tuple[ft.TrackerState,
+                                               PipelineStepOutput]:
+        """The serving frontend's bucket-shaped entry point: the full lane
+        core over a *padded* microbatch whose tail rows carry ``keep ==
+        False`` (the trackers drop them via the keep mask, so the state is
+        bit-identical to merging only the kept rows).  jit caches one
+        compiled entry per bucket shape — ``warm_bucket`` pre-compiles them
+        so ragged arrivals never retrace."""
+        self.trace_count += 1  # python side effect: runs per trace, not per call
+        return self._lane_core(state, packets, keep)
+
     # -------------------------------------------------------------- host loop
     def warmup(self) -> None:
         """Compile the dispatch path ``run`` will use, on a throwaway state
@@ -311,8 +389,8 @@ class OctopusPipeline:
         jax.block_until_ready(out)
         self._step_warmed = True
 
-    def _zero_batch(self) -> ft.PacketBatch:
-        p, c = self.cfg.batch_size, self.cfg
+    def _zero_batch(self, n: Optional[int] = None) -> ft.PacketBatch:
+        p, c = self.cfg.batch_size if n is None else n, self.cfg
         return ft.PacketBatch(
             ts=jnp.zeros((p,), jnp.int32), size=jnp.zeros((p,), jnp.int32),
             dir=jnp.zeros((p,), jnp.int32), flags=jnp.zeros((p,), jnp.int32),
@@ -358,6 +436,52 @@ class OctopusPipeline:
         self.stats.record_dispatch(dt, packets=n, flows=n_flows,
                                    new_flows=int(out.new_flows),
                                    evicted=int(out.evicted))
+        return out
+
+    # ---------------------------------------------------- bucketed (masked)
+    def warm_bucket(self, bucket: int) -> None:
+        """Pre-compile the masked entry point for one bucket size on
+        throwaway state (idempotent per size).  The serving frontend calls
+        this for every configured bucket at startup, so ragged request sizes
+        pad to a pre-warmed shape and ``trace_count`` stays flat."""
+        if bucket <= 0:
+            raise ValueError(f"bucket must be positive, got {bucket}")
+        if bucket in self._warm_buckets:
+            return
+        scratch = self._fresh_state()
+        _, out = self._masked_fn(scratch, self._zero_batch(bucket),
+                                 jnp.zeros((bucket,), bool))
+        jax.block_until_ready(out)
+        self._warm_buckets.add(bucket)
+
+    def step_masked(self, packets: ft.PacketBatch,
+                    keep: np.ndarray) -> PipelineStepOutput:
+        """One padded request batch through the loop: rows with ``keep ==
+        False`` are padding — excluded from the tracker merge, the rule-table
+        feedback and the packet stats (they count as ``padded``, like a
+        sharded lane's skew rows).  The batch may be any pre-warmed bucket
+        size; it is NOT tied to ``cfg.batch_size``."""
+        bucket = int(np.asarray(packets.ts).shape[0])
+        k = np.asarray(keep)
+        if k.shape != (bucket,):
+            raise ValueError(f"keep must have shape ({bucket},), got {k.shape}")
+        n = int(k.sum())
+        t0 = time.perf_counter()
+        self.state, out = self._masked_fn(self.state, packets,
+                                          jnp.asarray(k))
+        jax.block_until_ready((self.state, out))
+        dt = time.perf_counter() - t0
+        self._warm_buckets.add(bucket)  # compiled now, whatever the path
+
+        n_flows = self._feedback(
+            np.asarray(packets.tuple_hash)[k], np.asarray(out.pkt_actions)[k],
+            np.asarray(out.drained.mask), np.asarray(out.drained.tuple_id),
+            np.asarray(out.flow_actions), np.asarray(out.flow_cls))
+
+        self.stats.record_dispatch(dt, packets=n, flows=n_flows,
+                                   new_flows=int(out.new_flows),
+                                   evicted=int(out.evicted),
+                                   padded=bucket - n)
         return out
 
     def _chunk_feedback(self, batches: Sequence[ft.PacketBatch],

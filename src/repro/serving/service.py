@@ -1,0 +1,449 @@
+"""Async batch serving frontend over the streaming pipelines.
+
+The paper's Octopus sits on the data plane and absorbs whatever arrival
+pattern the wire delivers; :class:`~repro.serving.pipeline.OctopusPipeline`
+is the compute analogue, but its ``run()`` loop is synchronous and fed by a
+single generator.  Serving many concurrent clients with uneven, bursty
+arrivals is a queueing problem in front of a fixed-shape inference engine —
+the shape dataplane co-processors (and batch LLM servers like SHARK's
+``service_v1``) all share:
+
+  * a **request queue** accepting per-client packet microbatches of
+    arbitrary size (:meth:`OctopusService.submit`),
+  * a **batcher** that coalesces queued requests and pads the coalesced
+    batch to the nearest pre-warmed ``bucket`` size — every bucket's masked
+    entry point is compiled at startup, so ragged arrivals *never retrace*
+    (``trace_count`` stays flat after :meth:`start`; asserted in tests),
+  * **inflight buffer pooling**: the host staging arrays a dispatch packs
+    requests into are reused per bucket, not reallocated per request,
+  * **admission control**: when queued packets exceed ``depth_budget``, new
+    submissions either get an explicit :class:`Rejected` result (``"shed"``)
+    or wait for space (``"block"``), policy-selectable,
+  * **latency observability**: per-client and global p50/p99 queue-wait and
+    end-to-end latency (bounded :class:`~repro.serving.pipeline.LatencyReservoir`
+    samples) plus queue-depth high-water marks in :class:`ServiceStats`.
+
+The device dispatch itself stays synchronous inside the dispatcher task —
+the tracker state is a sequential carry, there is exactly one engine —
+so ``asyncio`` here buys exactly what the paper's wire interface buys the
+FPGA: many independent arrival processes multiplexed into one fixed-shape
+compute loop.  Clients run closed-loop (``await submit(...)``) and the
+batcher's coalescing is where concurrency turns into throughput: N clients
+awaiting together become one padded bucket dispatch instead of N tiny ones.
+
+Correctness: a request of size ``b < bucket`` padded-then-served produces
+verdicts and tracker state **bit-identical** to serving it through the
+unpadded synchronous pipeline (the keep-mask machinery from the sharded
+lanes; differentially tested in ``tests/test_service.py``).
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.flow_tracker import PacketBatch
+from repro.data.traffic import TrafficGenerator
+from repro.serving.pipeline import LatencyReservoir, OctopusPipeline
+
+ADMISSION_POLICIES = ("shed", "block")
+
+# PacketBatch scalar (per-packet) int32 leaves, in field order; payload is
+# the one 2-D leaf and is staged separately.
+_SCALAR_FIELDS = ("ts", "size", "dir", "flags", "proto", "tuple_hash")
+
+
+@dataclass(frozen=True)
+class ServiceConfig:
+    """Knobs of the serving frontend (see docs/ARCHITECTURE.md for the
+    knob table)."""
+
+    buckets: tuple[int, ...] = (32, 64, 128, 256)  # pre-warmed batch shapes
+    depth_budget: int = 1024  # max queued packets before admission control
+    admission: str = "shed"  # "shed" -> Rejected result | "block" -> await
+    batch_wait_s: float = 0.0  # grace the batcher waits to coalesce more
+    sample_capacity: int = 1024  # latency reservoir depth (per scope)
+    pool_depth: int = 4  # staging buffers retained per bucket
+
+    def __post_init__(self):
+        if not self.buckets or any(b <= 0 for b in self.buckets):
+            raise ValueError(f"buckets must be positive, got {self.buckets}")
+        if tuple(sorted(set(self.buckets))) != tuple(self.buckets):
+            raise ValueError(f"buckets must be strictly increasing, "
+                             f"got {self.buckets}")
+        if self.admission not in ADMISSION_POLICIES:
+            raise ValueError(f"admission must be one of {ADMISSION_POLICIES}, "
+                             f"got {self.admission!r}")
+        if self.depth_budget <= 0 or self.pool_depth <= 0:
+            raise ValueError("depth_budget and pool_depth must be positive")
+        if self.batch_wait_s < 0:
+            raise ValueError(f"batch_wait_s must be >= 0, "
+                             f"got {self.batch_wait_s}")
+
+
+@dataclass(frozen=True)
+class ServeResult:
+    """One served request: per-packet verdicts in the request's own order."""
+
+    client_id: int
+    pkt_actions: np.ndarray  # (n,) int32 0 allow / 1 deny
+    bucket: int  # the pre-warmed entry point that served it (largest chunk's)
+    queue_wait_s: float  # enqueue -> dispatch start
+    e2e_s: float  # enqueue -> verdicts ready
+
+
+@dataclass(frozen=True)
+class Rejected:
+    """Admission-control shed: the queue was over budget when this request
+    arrived.  An explicit result, not an exception — shedding is a normal
+    dataplane outcome the client is expected to handle (retry, back off)."""
+
+    client_id: int
+    packets: int  # size of the rejected request
+    queue_depth: int  # queued packets at rejection time
+    depth_budget: int
+
+
+SubmitOutcome = Union[ServeResult, Rejected]
+
+
+@dataclass
+class ClientStats:
+    """Per-client slice of the service counters."""
+
+    requests: int = 0
+    submitted: int = 0  # packets offered (incl. shed)
+    served: int = 0  # packets that got verdicts
+    shed: int = 0  # packets rejected by admission control
+    wait: LatencyReservoir = field(default_factory=LatencyReservoir)
+    e2e: LatencyReservoir = field(default_factory=LatencyReservoir)
+
+
+@dataclass
+class ServiceStats:
+    """Global service counters + per-client breakdown.  The latency
+    reservoirs sample in **microseconds**; idle percentiles are ``nan``
+    (the ``PipelineStats`` convention)."""
+
+    requests: int = 0
+    served_requests: int = 0
+    shed_requests: int = 0
+    submitted: int = 0  # packets offered
+    served: int = 0  # packets dispatched + answered
+    shed: int = 0  # packets rejected
+    dispatches: int = 0  # bucket dispatches issued
+    coalesced: int = 0  # requests merged into those dispatches
+    padded: int = 0  # bucket pad rows dispatched (masked)
+    depth_hwm: int = 0  # queue-depth high-water mark (packets)
+    pool_hits: int = 0
+    pool_misses: int = 0
+    wall_s: float = 0.0  # start() -> last dispatch completion
+    wait: LatencyReservoir = field(default_factory=LatencyReservoir)
+    e2e: LatencyReservoir = field(default_factory=LatencyReservoir)
+    clients: dict[int, ClientStats] = field(default_factory=dict)
+
+    def client(self, client_id: int) -> ClientStats:
+        st = self.clients.get(client_id)
+        if st is None:
+            cap = self.wait.capacity
+            st = self.clients[client_id] = ClientStats(
+                wait=LatencyReservoir(cap), e2e=LatencyReservoir(cap))
+        return st
+
+    @property
+    def pkt_per_s(self) -> float:
+        """Sustained served packet rate over the service's wall clock."""
+        return self.served / self.wall_s if self.wall_s > 0 else 0.0
+
+
+class _BufferPool:
+    """Per-bucket pool of host staging arrays (one PacketBatch worth of
+    numpy leaves + a keep mask).  ``jnp.asarray`` copies host memory into
+    the device buffer at dispatch and the dispatcher blocks on the result,
+    so a released buffer is safe to refill immediately — requests reuse the
+    staging arrays instead of allocating fresh ones per dispatch."""
+
+    def __init__(self, pay_bytes: int, depth: int, stats: ServiceStats):
+        self.pay_bytes = pay_bytes
+        self.depth = depth
+        self.stats = stats
+        self._free: dict[int, list[dict]] = {}
+
+    def acquire(self, bucket: int) -> dict:
+        free = self._free.setdefault(bucket, [])
+        if free:
+            self.stats.pool_hits += 1
+            return free.pop()
+        self.stats.pool_misses += 1
+        buf = {f: np.zeros(bucket, np.int32) for f in _SCALAR_FIELDS}
+        buf["payload"] = np.zeros((bucket, self.pay_bytes), np.int32)
+        buf["keep"] = np.zeros(bucket, bool)
+        return buf
+
+    def release(self, buf: dict) -> None:
+        free = self._free.setdefault(len(buf["keep"]), [])
+        if len(free) < self.depth:
+            free.append(buf)
+
+
+@dataclass
+class _Pending:
+    """One queued request chunk (a submit larger than the largest bucket
+    splits into several, each at most one bucket)."""
+
+    client_id: int
+    leaves: dict  # host numpy views of the PacketBatch leaves
+    n: int
+    enqueued_at: float
+    future: asyncio.Future
+    dispatched_at: float = 0.0
+
+
+class OctopusService:
+    """Asyncio serving frontend over an :class:`OctopusPipeline` (or
+    :class:`~repro.serving.sharded.ShardedOctopusPipeline` — both expose the
+    same ``warm_bucket``/``step_masked`` masked entry surface).
+
+    Lifecycle::
+
+        service = OctopusService(pipeline, ServiceConfig(buckets=(32, 64)))
+        await service.start()        # pre-warms every bucket entry point
+        result = await service.submit(batch, client_id=7)
+        await service.stop()         # drains the queue, then stops
+
+    or ``async with OctopusService(...) as service: ...``.
+    """
+
+    def __init__(self, pipeline: OctopusPipeline,
+                 cfg: ServiceConfig = ServiceConfig()):
+        self.pipeline = pipeline
+        self.cfg = cfg
+        self.stats = ServiceStats(
+            wait=LatencyReservoir(cfg.sample_capacity),
+            e2e=LatencyReservoir(cfg.sample_capacity))
+        self._pool = _BufferPool(pipeline.cfg.pay_bytes, cfg.pool_depth,
+                                 self.stats)
+        self._queue: deque[_Pending] = deque()
+        self._depth = 0  # queued packets
+        self._work: Optional[asyncio.Event] = None
+        self._space: Optional[asyncio.Event] = None
+        self._dispatcher: Optional[asyncio.Task] = None
+        self._stopping = False
+        self._started_at = 0.0
+
+    # ------------------------------------------------------------- lifecycle
+    @property
+    def trace_count(self) -> int:
+        """The pipeline's retrace counter — flat after :meth:`start` is the
+        no-retrace-on-ragged-arrivals proof."""
+        return self.pipeline.trace_count
+
+    @property
+    def queue_depth(self) -> int:
+        """Currently queued packets (admission control's input)."""
+        return self._depth
+
+    async def start(self) -> None:
+        """Pre-compile every bucket's masked entry point (outside any timed
+        region) and start the dispatcher task."""
+        if self._dispatcher is not None:
+            raise RuntimeError("service already started")
+        for b in self.cfg.buckets:
+            self.pipeline.warm_bucket(b)
+        self._work = asyncio.Event()
+        self._space = asyncio.Event()
+        self._stopping = False
+        self._started_at = time.perf_counter()
+        self._dispatcher = asyncio.create_task(self._dispatch_loop())
+
+    async def stop(self) -> None:
+        """Drain the queue (every accepted request still gets its result),
+        then stop the dispatcher."""
+        if self._dispatcher is None:
+            return
+        self._stopping = True
+        self._work.set()
+        await self._dispatcher
+        self._dispatcher = None
+
+    async def __aenter__(self) -> "OctopusService":
+        await self.start()
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    # ---------------------------------------------------------------- submit
+    def _host_leaves(self, packets: PacketBatch) -> dict:
+        leaves = {f: np.asarray(getattr(packets, f)) for f in _SCALAR_FIELDS}
+        leaves["payload"] = np.asarray(packets.payload)
+        if leaves["payload"].shape[1:] != (self.pipeline.cfg.pay_bytes,):
+            raise ValueError(
+                f"payload width {leaves['payload'].shape[1:]} does not match "
+                f"the pipeline's pay_bytes={self.pipeline.cfg.pay_bytes}")
+        return leaves
+
+    async def submit(self, packets: PacketBatch,
+                     client_id: int = 0) -> SubmitOutcome:
+        """Queue one microbatch (any size) and await its verdicts.
+
+        Admission control runs *before* anything is enqueued, against the
+        whole request: ``"shed"`` returns :class:`Rejected` immediately when
+        the queue is over budget, ``"block"`` waits for space.  A request
+        larger than the largest bucket is split into bucket-sized chunks
+        that dispatch in order (still one result)."""
+        if self._dispatcher is None:
+            raise RuntimeError("service not started (use `async with` or "
+                               "`await service.start()`)")
+        leaves = self._host_leaves(packets)
+        n = int(leaves["ts"].shape[0])
+        if n == 0:  # empty submits answer immediately and skew nothing
+            return ServeResult(client_id, np.zeros(0, np.int32), 0, 0.0, 0.0)
+        gstats = self.stats
+        cstats = gstats.client(client_id)
+        gstats.requests += 1
+        cstats.requests += 1
+        gstats.submitted += n
+        cstats.submitted += n
+
+        if self._depth + n > self.cfg.depth_budget:
+            if self.cfg.admission == "shed":
+                gstats.shed_requests += 1
+                cstats.shed += n
+                gstats.shed += n
+                return Rejected(client_id, n, self._depth,
+                                self.cfg.depth_budget)
+            while self._depth + n > self.cfg.depth_budget:
+                self._space.clear()
+                await self._space.wait()
+
+        # enqueue every chunk before the first await, so admission order is
+        # submission order (a gather of submits sheds deterministically)
+        top = self.cfg.buckets[-1]
+        loop = asyncio.get_running_loop()
+        now = time.perf_counter()
+        chunks: list[_Pending] = []
+        for off in range(0, n, top):
+            m = min(top, n - off)
+            sl = {k: v[off:off + m] for k, v in leaves.items()}
+            chunks.append(_Pending(client_id, sl, m, now, loop.create_future()))
+        self._queue.extend(chunks)
+        self._depth += n
+        gstats.depth_hwm = max(gstats.depth_hwm, self._depth)
+        self._work.set()
+
+        await asyncio.gather(*(c.future for c in chunks))
+        done = time.perf_counter()
+        actions = np.concatenate([c.future.result() for c in chunks])
+        wait_s = chunks[0].dispatched_at - now
+        e2e_s = done - now
+        gstats.served_requests += 1
+        gstats.served += n
+        cstats.served += n
+        for st in (gstats, cstats):
+            st.wait.add(wait_s * 1e6)
+            st.e2e.add(e2e_s * 1e6)
+        return ServeResult(client_id, actions,
+                           self._bucket_for(chunks[-1].n), wait_s, e2e_s)
+
+    # ------------------------------------------------------------- dispatcher
+    def _bucket_for(self, n: int) -> int:
+        for b in self.cfg.buckets:
+            if n <= b:
+                return b
+        raise AssertionError(f"chunk of {n} exceeds the largest bucket "
+                             f"{self.cfg.buckets[-1]}")  # pragma: no cover
+
+    def _take_coalesced(self) -> list[_Pending]:
+        """Pop a FIFO run of requests that fits the largest bucket (always
+        at least one — chunks never exceed it)."""
+        top = self.cfg.buckets[-1]
+        reqs = [self._queue.popleft()]
+        total = reqs[0].n
+        while self._queue and total + self._queue[0].n <= top:
+            nxt = self._queue.popleft()
+            reqs.append(nxt)
+            total += nxt.n
+        return reqs
+
+    def _dispatch_one(self, reqs: list[_Pending]) -> None:
+        """Pack a coalesced run into a pooled staging buffer, pad to the
+        bucket, dispatch the masked step, and answer every request with its
+        slice of the verdicts."""
+        total = sum(r.n for r in reqs)
+        bucket = self._bucket_for(total)
+        buf = self._pool.acquire(bucket)
+        off = 0
+        for r in reqs:
+            for f in _SCALAR_FIELDS:
+                buf[f][off:off + r.n] = r.leaves[f]
+            buf["payload"][off:off + r.n] = r.leaves["payload"]
+            off += r.n
+        for f in _SCALAR_FIELDS:  # zero the pad tail: stale rows out
+            buf[f][total:] = 0
+        buf["payload"][total:] = 0
+        buf["keep"][:total] = True
+        buf["keep"][total:] = False
+
+        t_dispatch = time.perf_counter()
+        for r in reqs:
+            r.dispatched_at = t_dispatch
+        batch = PacketBatch(
+            **{f: jnp.asarray(buf[f]) for f in _SCALAR_FIELDS},
+            payload=jnp.asarray(buf["payload"]))
+        out = self.pipeline.step_masked(batch, buf["keep"])
+        actions = np.asarray(out.pkt_actions)
+
+        off = 0
+        for r in reqs:
+            r.future.set_result(actions[off:off + r.n].copy())
+            off += r.n
+        self._pool.release(buf)
+        self._depth -= total
+        self._space.set()
+        self.stats.dispatches += 1
+        self.stats.coalesced += len(reqs)
+        self.stats.padded += bucket - total
+        self.stats.wall_s = time.perf_counter() - self._started_at
+
+    async def _dispatch_loop(self) -> None:
+        while True:
+            await self._work.wait()
+            if not self._queue:
+                if self._stopping:
+                    return
+                self._work.clear()
+                continue
+            if self.cfg.batch_wait_s > 0:
+                # coalescing grace: let concurrent clients land their
+                # submits before the bucket is chosen
+                await asyncio.sleep(self.cfg.batch_wait_s)
+            else:
+                # yield once so a gather of submits enqueues as one wave
+                await asyncio.sleep(0)
+            if not self._queue:
+                continue
+            self._dispatch_one(self._take_coalesced())
+
+
+async def serve_stream(service: OctopusService, gen: TrafficGenerator, *,
+                       requests: int,
+                       client_id: Optional[int] = None) -> list[SubmitOutcome]:
+    """Closed-loop client: submit ``requests`` microbatches from one seeded
+    generator sequentially (each awaited before the next — the arrival
+    process a real port presents) and return the outcomes.  Run several of
+    these under ``asyncio.gather`` for a multi-client load."""
+    cid = gen.client_id if client_id is None else client_id
+    results: list[SubmitOutcome] = []
+    for batch in gen.batches(requests):
+        results.append(await service.submit(batch, client_id=cid))
+    return results
+
+
+__all__ = ["OctopusService", "ServiceConfig", "ServiceStats", "ClientStats",
+           "ServeResult", "Rejected", "ADMISSION_POLICIES", "serve_stream"]

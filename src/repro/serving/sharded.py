@@ -155,14 +155,15 @@ class ShardedOctopusPipeline(OctopusPipeline):
         spec = shd.lanes_spec()
         return shard_map(body, mesh=self.mesh, in_specs=spec, out_specs=spec)
 
-    def _merge_out(self, outs: PipelineStepOutput,
-                   src: jax.Array) -> PipelineStepOutput:
+    def _merge_out(self, outs: PipelineStepOutput, src: jax.Array, *,
+                   batch: Optional[int] = None) -> PipelineStepOutput:
         """Per-lane outputs (leading ``num_shards`` axis) -> one merged
         step output with the single-lane shapes: packet actions scattered
         back to original batch order (padding rows carry ``src ==
         batch_size`` and drop), lane drain rows concatenated into the global
-        ``max_ready`` emission."""
-        B = self.cfg.batch_size
+        ``max_ready`` emission.  ``batch`` overrides the scatter target size
+        for bucket-shaped masked steps (default: the config batch)."""
+        B = self.cfg.batch_size if batch is None else batch
         pkt_actions = jnp.zeros((B,), jnp.int32).at[src.reshape(-1)].set(
             outs.pkt_actions.reshape(-1), mode="drop")
         flat = lambda a: a.reshape((self.cfg.max_ready,) + a.shape[2:])
@@ -195,7 +196,8 @@ class ShardedOctopusPipeline(OctopusPipeline):
             states, shards, keep)
 
     def _sharded_core(self, states: ft.TrackerState, shards: ft.PacketBatch,
-                      keep: jax.Array, src: jax.Array
+                      keep: jax.Array, src: jax.Array, *,
+                      batch: Optional[int] = None
                       ) -> tuple[ft.TrackerState, PipelineStepOutput]:
         """One full sharded step: every lane runs the shard-shaped
         ``_lane_core`` (merge + lane-budget drain + both engines + decide)
@@ -205,7 +207,7 @@ class ShardedOctopusPipeline(OctopusPipeline):
                 st, p, k, max_ready=self.lane_ready, fallback=fb)
 
         states, outs = self._lanes_cond(make_lane, states, shards, keep)
-        return states, self._merge_out(outs, src)
+        return states, self._merge_out(outs, src, batch=batch)
 
     def _sharded_step(self, states, shards, keep, src):
         self.trace_count += 1  # python side effect: runs per trace, not per call
@@ -217,6 +219,15 @@ class ShardedOctopusPipeline(OctopusPipeline):
         self.trace_count += 1  # python side effect: runs per trace, not per call
         return lax.scan(lambda st, xs: self._sharded_core(st, *xs),
                         states, (shards, keep, src))
+
+    def _masked_step(self, states, shards, keep, src):
+        """Bucket-shaped sharded entry point: lane shapes are (S, bucket) —
+        the masked dispatch always partitions at full bucket capacity (single
+        round, skew-proof), so the merge scatter target is the bucket, read
+        off the static lane shape."""
+        self.trace_count += 1  # python side effect: runs per trace, not per call
+        return self._sharded_core(states, shards, keep, src,
+                                  batch=src.shape[1])
 
     def _sharded_merge(self, states, shards, keep):
         """Merge-only overflow round (step 2 + the per-packet engine): folds
@@ -333,13 +344,60 @@ class ShardedOctopusPipeline(OctopusPipeline):
             padded=sum(self._padded_rows([p]) for p in parts))
         return out
 
-    def _zero_parts(self) -> ShardedBatch:
-        C, S, B = self.lane_batch, self.num_shards, self.cfg.batch_size
+    def _zero_parts(self, bucket: Optional[int] = None) -> ShardedBatch:
+        C = self.lane_batch if bucket is None else bucket
+        S = self.num_shards
+        B = self.cfg.batch_size if bucket is None else bucket
         pkt = jax.tree_util.tree_map(
             lambda a: jnp.zeros((S, C) + a.shape[1:], a.dtype),
             self._zero_batch())
         return ShardedBatch(shards=pkt, keep=jnp.zeros((S, C), bool),
                             src=jnp.full((S, C), B, jnp.int32))
+
+    # ---------------------------------------------------- bucketed (masked)
+    def warm_bucket(self, bucket: int) -> None:
+        """Pre-compile the masked sharded entry for one bucket size: lane
+        shapes (num_shards, bucket), single round."""
+        if bucket <= 0:
+            raise ValueError(f"bucket must be positive, got {bucket}")
+        if bucket in self._warm_buckets:
+            return
+        scratch = self._fresh_state()
+        zb = self._zero_parts(bucket)
+        _, out = self._masked_fn(scratch, zb.shards, zb.keep, zb.src)
+        jax.block_until_ready(out)
+        self._warm_buckets.add(bucket)
+
+    def step_masked(self, packets: ft.PacketBatch,
+                    keep: np.ndarray) -> PipelineStepOutput:
+        """One padded request batch through all lanes.  The keep mask is
+        folded into the hash partition (padding rows land in no lane), and
+        the partition runs at full bucket capacity — always one round, so a
+        bucket compiles exactly one entry whatever the skew."""
+        bucket = int(np.asarray(packets.ts).shape[0])
+        k = np.asarray(keep, bool)
+        if k.shape != (bucket,):
+            raise ValueError(f"keep must have shape ({bucket},), got {k.shape}")
+        n = int(k.sum())
+        sb = partition_batch(packets, self.num_shards, keep=k)[0]
+
+        t0 = time.perf_counter()
+        self.state, out = self._masked_fn(self.state, sb.shards, sb.keep,
+                                          sb.src)
+        jax.block_until_ready((self.state, out))
+        dt = time.perf_counter() - t0
+        self._warm_buckets.add(bucket)
+
+        n_flows = self._feedback(
+            np.asarray(packets.tuple_hash)[k], np.asarray(out.pkt_actions)[k],
+            np.asarray(out.drained.mask), np.asarray(out.drained.tuple_id),
+            np.asarray(out.flow_actions), np.asarray(out.flow_cls))
+
+        self.stats.record_dispatch(
+            dt, packets=n, flows=n_flows, new_flows=int(out.new_flows),
+            evicted=int(out.evicted),
+            padded=self.num_shards * bucket - n)
+        return out
 
     def warmup(self) -> None:
         """Compile the dispatch paths ``run`` will use on throwaway state:

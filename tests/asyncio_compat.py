@@ -1,0 +1,29 @@
+"""Optional pytest-asyncio shim (see requirements-dev.txt).
+
+The serving-frontend tests are coroutines.  With ``pytest-asyncio``
+installed (the CI lane; ``asyncio_mode = "auto"`` in pyproject.toml) they
+run natively.  Without it the suite must still pass — decorate with
+``@async_test`` and the coroutine is wrapped in ``asyncio.run`` instead of
+being silently skipped-as-uncollected.  With pytest-asyncio present the
+decorator is a pass-through (auto mode collects the bare coroutine).
+"""
+import asyncio
+import functools
+
+try:
+    import pytest_asyncio  # noqa: F401
+
+    HAVE_PYTEST_ASYNCIO = True
+except ImportError:
+    HAVE_PYTEST_ASYNCIO = False
+
+
+def async_test(fn):
+    if HAVE_PYTEST_ASYNCIO:
+        return fn
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        return asyncio.run(fn(*args, **kwargs))
+
+    return wrapper

@@ -110,6 +110,35 @@ def test_pipeline_stats_empty_is_nan_and_zero():
     s = PipelineStats()
     assert s.pkt_per_s == 0.0 and s.flow_per_s == 0.0
     assert math.isnan(s.step_us) and math.isnan(s.dispatch_us)
+    # idle percentiles are nan too (the latency_us convention) — never a
+    # fake 0us tail
+    assert math.isnan(s.p50_us) and math.isnan(s.p99_us)
+
+
+def test_pipeline_stats_percentiles_from_dispatch_samples():
+    from repro.serving import PipelineStats
+
+    s = PipelineStats()
+    for dt_ms in (1.0, 2.0, 3.0, 100.0):  # one slow outlier
+        s.record_dispatch(dt_ms * 1e-3, packets=32)
+    assert s.p50_us == pytest.approx(2500.0)  # median of 1/2/3/100 ms
+    assert s.p99_us > 90_000.0  # the tail sees the outlier
+    assert s.dispatch_us == pytest.approx(26_500.0)  # the mean hides neither
+
+
+def test_latency_reservoir_is_bounded_ring():
+    from repro.serving import LatencyReservoir
+
+    r = LatencyReservoir(capacity=8)
+    assert math.isnan(r.p50) and math.isnan(r.percentile(99.0)) and len(r) == 0
+    for v in range(100):
+        r.add(float(v))
+    # bounded memory: only the last `capacity` samples are retained
+    assert len(r) == 8 and r.total_added == 100
+    assert r.p50 == pytest.approx(95.5)  # median of 92..99
+    assert r.percentile(0.0) == 92.0 and r.percentile(100.0) == 99.0
+    with pytest.raises(ValueError, match="capacity"):
+        LatencyReservoir(capacity=0)
 
 
 # -------------------------------------------------------------------- engines

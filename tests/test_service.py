@@ -1,0 +1,359 @@
+"""Serving frontend: bucketed batching exactness, no-retrace-on-ragged
+arrivals, admission control (shed + block), coalescing, buffer pooling, and
+per-client latency observability.
+
+The load-bearing test is the bucketed-padding differential: a request of
+size ``b < bucket`` padded-then-served must produce verdicts, tracker state,
+drained flows and rule-table contents bit-identical to serving it through
+the unpadded synchronous pipeline — the keep-mask machinery from the sharded
+lanes, re-used as the service's correctness story.
+"""
+import asyncio
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from asyncio_compat import async_test
+from conftest import assert_states_equal
+
+from repro.data.traffic import TrafficConfig, TrafficGenerator
+from repro.models import paper_models
+from repro.serving import (
+    OctopusPipeline,
+    OctopusService,
+    PipelineConfig,
+    Rejected,
+    ServeResult,
+    ServiceConfig,
+    ShardedOctopusPipeline,
+    serve_stream,
+)
+
+
+@pytest.fixture(scope="module")
+def mlp_params():
+    return paper_models.init_paper_model("mlp", jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def cnn_params():
+    return paper_models.init_paper_model("cnn", jax.random.PRNGKey(1))
+
+
+def make_pipeline(mlp_params, cnn_params, *, batch_size=32, max_ready=4,
+                  table_size=128, num_shards=0, **kw):
+    cfg = PipelineConfig(batch_size=batch_size, max_ready=max_ready,
+                         flow_model="cnn", table_size=table_size, **kw)
+    if num_shards:
+        return ShardedOctopusPipeline(mlp_params, cnn_params, cfg,
+                                      num_shards=num_shards)
+    return OctopusPipeline(mlp_params, cnn_params, cfg)
+
+
+def gen_of(batch_size, seed, client_id=0, table_size=128):
+    return TrafficGenerator(TrafficConfig(
+        batch_size=batch_size, active_flows=8, elephant_fraction=0.4,
+        table_size=table_size, seed=seed, client_id=client_id))
+
+
+def pad_batch(batch, bucket):
+    """Tail-pad a PacketBatch to ``bucket`` rows; returns (padded, keep)."""
+    n = int(np.asarray(batch.ts).shape[0])
+    padded = jax.tree_util.tree_map(
+        lambda a: jnp.concatenate(
+            [a, jnp.zeros((bucket - n,) + a.shape[1:], a.dtype)]), batch)
+    return padded, np.arange(bucket) < n
+
+
+# ------------------------------------------------- config / surface guards
+
+def test_service_config_validation():
+    with pytest.raises(ValueError, match="buckets"):
+        ServiceConfig(buckets=())
+    with pytest.raises(ValueError, match="increasing"):
+        ServiceConfig(buckets=(32, 16))
+    with pytest.raises(ValueError, match="increasing"):
+        ServiceConfig(buckets=(16, 16))
+    with pytest.raises(ValueError, match="admission"):
+        ServiceConfig(admission="drop")
+    with pytest.raises(ValueError, match="positive"):
+        ServiceConfig(depth_budget=0)
+    with pytest.raises(ValueError, match="batch_wait_s"):
+        ServiceConfig(batch_wait_s=-1.0)
+
+
+@async_test
+async def test_submit_before_start_raises(mlp_params, cnn_params):
+    svc = OctopusService(make_pipeline(mlp_params, cnn_params))
+    with pytest.raises(RuntimeError, match="not started"):
+        await svc.submit(gen_of(4, 0).next_batch())
+
+
+def test_warm_bucket_rejects_nonpositive(mlp_params, cnn_params):
+    pipe = make_pipeline(mlp_params, cnn_params)
+    with pytest.raises(ValueError, match="bucket"):
+        pipe.warm_bucket(0)
+
+
+# ------------------------------------------- bucketed padding differential
+
+@pytest.mark.parametrize("tracker", ["segmented", "scan"])
+def test_bucketed_padding_bit_exact_vs_sync_pipeline(mlp_params, cnn_params,
+                                                     tracker):
+    """Padded-masked serving == unpadded synchronous pipeline, bit for bit:
+    verdicts, tracker state, drained emission, and the rule table."""
+    b, bucket = 24, 32
+    gen = gen_of(b, seed=3)
+    ref = OctopusPipeline(mlp_params, cnn_params,
+                          PipelineConfig(batch_size=b, max_ready=4,
+                                         table_size=128, tracker=tracker))
+    # a deliberately different cfg.batch_size: the masked entry must not
+    # care about the config batch at all
+    pad = OctopusPipeline(mlp_params, cnn_params,
+                          PipelineConfig(batch_size=99, max_ready=4,
+                                         table_size=128, tracker=tracker))
+    pad.warm_bucket(bucket)
+    for batch in gen.batches(6):
+        o_ref = ref.step(batch)
+        padded, keep = pad_batch(batch, bucket)
+        o_pad = pad.step_masked(padded, keep)
+        np.testing.assert_array_equal(np.asarray(o_ref.pkt_actions),
+                                      np.asarray(o_pad.pkt_actions)[:b])
+        np.testing.assert_array_equal(np.asarray(o_ref.drained.mask),
+                                      np.asarray(o_pad.drained.mask))
+        np.testing.assert_array_equal(np.asarray(o_ref.drained.tuple_id),
+                                      np.asarray(o_pad.drained.tuple_id))
+        np.testing.assert_array_equal(np.asarray(o_ref.flow_cls),
+                                      np.asarray(o_pad.flow_cls))
+        assert_states_equal(ref.state, pad.state)
+    assert ref.rules.rules == pad.rules.rules
+    # padding is accounted as padded rows, never as packets
+    assert pad.stats.packets == ref.stats.packets == 6 * b
+    assert pad.stats.padded == 6 * (bucket - b)
+
+
+def test_bucketed_padding_bit_exact_sharded(mlp_params, cnn_params):
+    """The same contract through the sharded lanes: masked bucket dispatch
+    == the sharded pipeline stepping the unpadded batch."""
+    b, bucket, S = 16, 24, 2
+    gen = gen_of(b, seed=11)
+    ref = make_pipeline(mlp_params, cnn_params, batch_size=b, num_shards=S)
+    pad = make_pipeline(mlp_params, cnn_params, batch_size=48, num_shards=S)
+    pad.warm_bucket(bucket)
+    for batch in gen.batches(5):
+        o_ref = ref.step(batch)
+        padded, keep = pad_batch(batch, bucket)
+        o_pad = pad.step_masked(padded, keep)
+        np.testing.assert_array_equal(np.asarray(o_ref.pkt_actions),
+                                      np.asarray(o_pad.pkt_actions)[:b])
+        np.testing.assert_array_equal(np.asarray(o_ref.drained.mask),
+                                      np.asarray(o_pad.drained.mask))
+        np.testing.assert_array_equal(np.asarray(o_ref.drained.tuple_id),
+                                      np.asarray(o_pad.drained.tuple_id))
+        assert_states_equal(ref.state, pad.state)
+    assert ref.rules.rules == pad.rules.rules
+
+
+# ----------------------------------------------- no retrace across buckets
+
+@async_test
+async def test_ragged_sizes_never_retrace_after_warmup(mlp_params, cnn_params):
+    """Acceptance: ragged request sizes spanning >= 3 buckets all pad to
+    pre-warmed entry points — trace_count stays flat after start()."""
+    pipe = make_pipeline(mlp_params, cnn_params)
+    svc = OctopusService(pipe, ServiceConfig(buckets=(8, 16, 32)))
+    async with svc:
+        warmed = svc.trace_count
+        assert warmed >= 3  # one masked trace per bucket
+        for i, size in enumerate((3, 8, 11, 16, 17, 29, 32, 5, 24)):
+            res = await svc.submit(gen_of(size, seed=i).next_batch())
+            assert isinstance(res, ServeResult)
+            assert res.pkt_actions.shape == (size,)
+            assert res.bucket in (8, 16, 32) and res.bucket >= size
+        assert svc.trace_count == warmed
+    assert svc.stats.served == 3 + 8 + 11 + 16 + 17 + 29 + 32 + 5 + 24
+
+
+@async_test
+async def test_sharded_service_no_retrace(mlp_params, cnn_params):
+    pipe = make_pipeline(mlp_params, cnn_params, batch_size=32, num_shards=2)
+    svc = OctopusService(pipe, ServiceConfig(buckets=(8, 16)))
+    async with svc:
+        warmed = svc.trace_count
+        for i, size in enumerate((5, 8, 13, 16, 3)):
+            res = await svc.submit(gen_of(size, seed=i).next_batch())
+            assert isinstance(res, ServeResult)
+            assert res.pkt_actions.shape == (size,)
+        assert svc.trace_count == warmed
+
+
+# ------------------------------------------------------ batching semantics
+
+@async_test
+async def test_concurrent_submits_coalesce_into_one_dispatch(mlp_params,
+                                                             cnn_params):
+    """4 clients landing together become ONE padded bucket dispatch — the
+    multiplexing win the frontend exists for."""
+    pipe = make_pipeline(mlp_params, cnn_params)
+    svc = OctopusService(pipe, ServiceConfig(buckets=(8, 16, 32)))
+    async with svc:
+        sizes = (5, 6, 7, 8)
+        outs = await asyncio.gather(*(
+            svc.submit(gen_of(n, seed=i).next_batch(), client_id=i)
+            for i, n in enumerate(sizes)))
+    assert all(isinstance(r, ServeResult) for r in outs)
+    assert svc.stats.dispatches == 1
+    assert svc.stats.coalesced == 4
+    assert svc.stats.padded == 32 - sum(sizes)
+    assert pipe.stats.packets == sum(sizes)
+
+
+@async_test
+async def test_coalescing_preserves_request_order_and_slices(mlp_params,
+                                                             cnn_params):
+    """Coalesced verdicts must slice back to requests exactly: serving two
+    requests together equals serving their concatenation synchronously."""
+    pipe = make_pipeline(mlp_params, cnn_params)
+    svc = OctopusService(pipe, ServiceConfig(buckets=(32,)))
+    b1 = gen_of(10, seed=1).next_batch()
+    b2 = gen_of(12, seed=2).next_batch()
+    async with svc:
+        r1, r2 = await asyncio.gather(svc.submit(b1, client_id=1),
+                                      svc.submit(b2, client_id=2))
+    both = jax.tree_util.tree_map(
+        lambda a, c: jnp.concatenate([a, c]), b1, b2)
+    ref = OctopusPipeline(
+        pipe.packet_engine.params, pipe.flow_engine.params,
+        PipelineConfig(batch_size=22, max_ready=4, table_size=128))
+    out = ref.step(both)
+    acts = np.asarray(out.pkt_actions)
+    np.testing.assert_array_equal(r1.pkt_actions, acts[:10])
+    np.testing.assert_array_equal(r2.pkt_actions, acts[10:])
+
+
+@async_test
+async def test_oversized_request_splits_into_bucket_chunks(mlp_params,
+                                                           cnn_params):
+    pipe = make_pipeline(mlp_params, cnn_params)
+    svc = OctopusService(pipe, ServiceConfig(buckets=(8, 16, 32),
+                                             depth_budget=256))
+    async with svc:
+        res = await svc.submit(gen_of(70, seed=0).next_batch())
+        assert isinstance(res, ServeResult)
+        assert res.pkt_actions.shape == (70,)
+    # 70 = 32 + 32 + 6 -> at least three dispatches, no lost packets
+    assert svc.stats.dispatches >= 3
+    assert svc.stats.served == 70 and pipe.stats.packets == 70
+
+
+@async_test
+async def test_empty_submit_answers_immediately(mlp_params, cnn_params):
+    from repro.core.flow_tracker import PacketBatch
+
+    empty = PacketBatch(
+        ts=jnp.zeros((0,), jnp.int32), size=jnp.zeros((0,), jnp.int32),
+        dir=jnp.zeros((0,), jnp.int32), flags=jnp.zeros((0,), jnp.int32),
+        proto=jnp.zeros((0,), jnp.int32),
+        tuple_hash=jnp.zeros((0,), jnp.int32),
+        payload=jnp.zeros((0, 16), jnp.int32))
+    svc = OctopusService(make_pipeline(mlp_params, cnn_params))
+    async with svc:
+        res = await svc.submit(empty)
+        assert isinstance(res, ServeResult)
+        assert res.pkt_actions.shape == (0,)
+    assert svc.stats.requests == 0 and svc.stats.dispatches == 0
+
+
+# ------------------------------------------------------- admission control
+
+@async_test
+async def test_shed_policy_rejects_over_budget(mlp_params, cnn_params):
+    """Acceptance: overrun the depth budget -> explicit Rejected results,
+    honest shed accounting, and everything accepted still gets served."""
+    pipe = make_pipeline(mlp_params, cnn_params)
+    svc = OctopusService(pipe, ServiceConfig(buckets=(16, 32),
+                                             depth_budget=32,
+                                             admission="shed"))
+    async with svc:
+        outs = await asyncio.gather(*(
+            svc.submit(gen_of(16, seed=i).next_batch(), client_id=i)
+            for i in range(4)))
+    served = [r for r in outs if isinstance(r, ServeResult)]
+    shed = [r for r in outs if isinstance(r, Rejected)]
+    # submits enqueue in gather order: 16 + 16 fill the budget, 3rd and 4th shed
+    assert len(served) == 2 and len(shed) == 2
+    for r in shed:
+        assert r.packets == 16
+        assert r.depth_budget == 32 and r.queue_depth == 32
+    s = svc.stats
+    assert s.shed == 32 and s.served == 32 and s.submitted == 64
+    assert s.shed_requests == 2 and s.served_requests == 2
+    assert s.depth_hwm <= 32  # the budget really bounded the queue
+
+
+@async_test
+async def test_block_policy_serves_everything(mlp_params, cnn_params):
+    pipe = make_pipeline(mlp_params, cnn_params)
+    svc = OctopusService(pipe, ServiceConfig(buckets=(16, 32),
+                                             depth_budget=32,
+                                             admission="block"))
+    async with svc:
+        outs = await asyncio.gather(*(
+            svc.submit(gen_of(16, seed=i).next_batch(), client_id=i)
+            for i in range(5)))
+    assert all(isinstance(r, ServeResult) for r in outs)
+    assert svc.stats.shed == 0 and svc.stats.served == 80
+    assert svc.stats.depth_hwm <= 32
+
+
+# --------------------------------------------------- pooling + observability
+
+@async_test
+async def test_buffer_pool_reuses_staging_arrays(mlp_params, cnn_params):
+    pipe = make_pipeline(mlp_params, cnn_params)
+    svc = OctopusService(pipe, ServiceConfig(buckets=(16,)))
+    async with svc:
+        for i in range(8):
+            await svc.submit(gen_of(10, seed=i).next_batch())
+    # one miss allocates the bucket's staging struct; the rest reuse it
+    assert svc.stats.pool_misses == 1
+    assert svc.stats.pool_hits == 7
+
+
+@async_test
+async def test_per_client_and_global_latency_stats(mlp_params, cnn_params):
+    pipe = make_pipeline(mlp_params, cnn_params)
+    svc = OctopusService(pipe, ServiceConfig(buckets=(8, 16, 32)))
+    # idle: percentile observability reports nan, never a fake 0
+    assert math.isnan(svc.stats.wait.p50) and math.isnan(svc.stats.e2e.p99)
+    async with svc:
+        gens = [gen_of(bs, seed=i, client_id=i) for i, bs in
+                enumerate((6, 11, 23))]
+        outs = await asyncio.gather(*(
+            serve_stream(svc, g, requests=4) for g in gens))
+    for res_list, g in zip(outs, gens):
+        for r in res_list:
+            assert isinstance(r, ServeResult) and r.client_id == g.client_id
+            assert 0 <= r.queue_wait_s <= r.e2e_s
+    s = svc.stats
+    assert set(s.clients) == {0, 1, 2}
+    for cid, c in s.clients.items():
+        assert c.requests == 4 and c.served == c.submitted
+        assert c.e2e.p99 >= c.wait.p50 >= 0
+        assert len(c.wait) == 4 and len(c.e2e) == 4
+    assert len(s.wait) == 12 and s.e2e.p99 > 0
+    assert s.depth_hwm > 0 and s.pkt_per_s > 0
+    # the pipeline-level dispatch reservoir filled too
+    assert pipe.stats.p99_us > 0
+
+
+@async_test
+async def test_queue_depth_returns_to_zero_after_drain(mlp_params, cnn_params):
+    pipe = make_pipeline(mlp_params, cnn_params)
+    svc = OctopusService(pipe, ServiceConfig(buckets=(32,)))
+    async with svc:
+        await asyncio.gather(*(
+            svc.submit(gen_of(8, seed=i).next_batch()) for i in range(6)))
+        assert svc.queue_depth == 0
