@@ -32,16 +32,21 @@ from benchmarks.common import row  # noqa: E402
 def _bench_one(flow_model: str, steps: int, batch: int, max_ready: int,
                table_size: int, active_flows: int, tracker: str,
                scan_len: int, num_shards: int = 0, lane_batch=None,
-               seed: int = 0):
+               seed: int = 0, quantize: bool = False):
+    import contextlib
+
     import jax
 
     from repro.data.traffic import TrafficConfig, TrafficGenerator
     from repro.models import paper_models
+    from repro.runtime import runtime_overrides
     from repro.serving import (
         OctopusPipeline,
         PipelineConfig,
         ShardedOctopusPipeline,
     )
+
+    from benchmarks.common import quant_scales
 
     kw = {} if flow_model == "cnn" else {"top_n": 8}
     cfg = PipelineConfig(batch_size=batch, max_ready=max_ready,
@@ -49,12 +54,17 @@ def _bench_one(flow_model: str, steps: int, batch: int, max_ready: int,
                          tracker=tracker, scan_len=scan_len, **kw)
     pkt_params = paper_models.init_paper_model("mlp", jax.random.PRNGKey(0))
     flow_params = paper_models.init_paper_model(flow_model, jax.random.PRNGKey(1))
-    if num_shards:
-        pipe = ShardedOctopusPipeline(pkt_params, flow_params, cfg,
-                                      num_shards=num_shards,
-                                      lane_batch=lane_batch)
-    else:
-        pipe = OctopusPipeline(pkt_params, flow_params, cfg)
+    # Pipelines capture the ambient runtime at construction, so the int8
+    # twin rows only need the override around the constructor.
+    ctx = (runtime_overrides(quantize=True, quant_scales=quant_scales())
+           if quantize else contextlib.nullcontext())
+    with ctx:
+        if num_shards:
+            pipe = ShardedOctopusPipeline(pkt_params, flow_params, cfg,
+                                          num_shards=num_shards,
+                                          lane_batch=lane_batch)
+        else:
+            pipe = OctopusPipeline(pkt_params, flow_params, cfg)
     gen = TrafficGenerator(TrafficConfig(
         batch_size=batch, active_flows=active_flows, elephant_fraction=0.3,
         table_size=table_size, seed=seed))
@@ -84,26 +94,32 @@ def run(steps: int = 48, smoke: bool = False):
     family (segmented tracker), whose rows share a per-lane load so the
     num_shards axis is the only variable."""
     if smoke:
-        grid = [("cnn", 32, 8, 256, 12, "scan", 1),
-                ("cnn", 32, 8, 256, 12, "segmented", 1),
-                ("cnn", 32, 8, 256, 12, "segmented", 16)]
+        grid = [("cnn", 32, 8, 256, 12, "scan", 1, False),
+                ("cnn", 32, 8, 256, 12, "segmented", 1, False),
+                ("cnn", 32, 8, 256, 12, "segmented", 16, False),
+                ("cnn", 32, 8, 256, 12, "segmented", 16, True)]
         steps = min(steps, 32)
     else:
-        grid = [("cnn", 32, 8, 1024, 16, "scan", 1),
-                ("cnn", 32, 8, 1024, 16, "segmented", 1),
-                ("cnn", 32, 8, 1024, 16, "segmented", 8),
-                ("cnn", 128, 16, 1024, 64, "segmented", 8),
-                ("transformer", 64, 8, 1024, 32, "scan", 1),
-                ("transformer", 64, 8, 1024, 32, "segmented", 8)]
-    for flow_model, batch, max_ready, table_size, active_flows, tracker, scan_len in grid:
+        grid = [("cnn", 32, 8, 1024, 16, "scan", 1, False),
+                ("cnn", 32, 8, 1024, 16, "segmented", 1, False),
+                ("cnn", 32, 8, 1024, 16, "segmented", 8, False),
+                ("cnn", 32, 8, 1024, 16, "segmented", 8, True),
+                ("cnn", 128, 16, 1024, 64, "segmented", 8, False),
+                ("cnn", 128, 16, 1024, 64, "segmented", 8, True),
+                ("transformer", 64, 8, 1024, 32, "scan", 1, False),
+                ("transformer", 64, 8, 1024, 32, "segmented", 8, False)]
+    for (flow_model, batch, max_ready, table_size, active_flows, tracker,
+         scan_len, quantize) in grid:
         # keep steps a multiple of scan_len (at least one full chunk):
         # partial chunks would compile the per-step path too and muddy the
         # dispatch-count comparison
         n_steps = max(scan_len, steps - steps % scan_len)
         pipe, s = _bench_one(flow_model, n_steps, batch, max_ready, table_size,
-                             active_flows, tracker, scan_len)
+                             active_flows, tracker, scan_len, quantize=quantize)
+        suffix = "_int8" if quantize else ""
         yield row(
-            f"pipeline_{flow_model}_b{batch}_{tracker}_x{scan_len}", s.step_us,
+            f"pipeline_{flow_model}_b{batch}_{tracker}_x{scan_len}{suffix}",
+            s.step_us,
             f"pkt_per_s={s.pkt_per_s:.0f};flow_per_s={s.flow_per_s:.1f};"
             f"steps={s.steps};dispatches={s.dispatches};flows={s.flows};"
             f"evicted={s.evicted};trace_count={pipe.trace_count}")

@@ -41,11 +41,14 @@ def _client_mixes(num_clients: int, batch: int, table_size: int):
 
 
 def _bench_one(num_clients: int, requests: int, batch: int, buckets,
-               table_size: int, num_shards: int = 0):
+               table_size: int, num_shards: int = 0, quantize: bool = False):
+    import contextlib
+
     import jax
 
     from repro.data.traffic import TrafficGenerator
     from repro.models import paper_models
+    from repro.runtime import runtime_overrides
     from repro.serving import (
         OctopusPipeline,
         OctopusService,
@@ -55,16 +58,23 @@ def _bench_one(num_clients: int, requests: int, batch: int, buckets,
         serve_stream,
     )
 
+    from benchmarks.common import quant_scales
+
     cfg = PipelineConfig(batch_size=buckets[-1], max_ready=8,
                          flow_model="cnn", table_size=table_size,
                          tracker="segmented")
     pkt_params = paper_models.init_paper_model("mlp", jax.random.PRNGKey(0))
     flow_params = paper_models.init_paper_model("cnn", jax.random.PRNGKey(1))
-    if num_shards:
-        pipe = ShardedOctopusPipeline(pkt_params, flow_params, cfg,
-                                      num_shards=num_shards)
-    else:
-        pipe = OctopusPipeline(pkt_params, flow_params, cfg)
+    # Pipelines capture the ambient runtime at construction, so the int8
+    # twin rows only need the override around the constructor.
+    ctx = (runtime_overrides(quantize=True, quant_scales=quant_scales())
+           if quantize else contextlib.nullcontext())
+    with ctx:
+        if num_shards:
+            pipe = ShardedOctopusPipeline(pkt_params, flow_params, cfg,
+                                          num_shards=num_shards)
+        else:
+            pipe = OctopusPipeline(pkt_params, flow_params, cfg)
     gens = [TrafficGenerator(c)
             for c in _client_mixes(num_clients, batch, table_size)]
 
@@ -83,16 +93,19 @@ def run(requests: int = 24, smoke: bool = False):
     """Yield CSV rows (name,us_per_call,derived): one multi-client service
     row per lane layout.  ``us_per_call`` is the client-observed p50 e2e."""
     if smoke:
-        grid = [(4, min(requests, 12), 16, (32, 64), 256, 0)]
+        grid = [(4, min(requests, 12), 16, (32, 64), 256, 0, False),
+                (4, min(requests, 12), 16, (32, 64), 256, 0, True)]
     else:
-        grid = [(4, requests, 16, (32, 64, 128), 1024, 0),
-                (8, requests, 24, (64, 128, 256), 1024, 0),
-                (4, requests, 16, (32, 64, 128), 1024, 2)]
-    for num_clients, reqs, batch, buckets, table_size, num_shards in grid:
+        grid = [(4, requests, 16, (32, 64, 128), 1024, 0, False),
+                (4, requests, 16, (32, 64, 128), 1024, 0, True),
+                (8, requests, 24, (64, 128, 256), 1024, 0, False),
+                (4, requests, 16, (32, 64, 128), 1024, 2, False)]
+    for num_clients, reqs, batch, buckets, table_size, num_shards, quantize in grid:
         svc, warm_traces = _bench_one(num_clients, reqs, batch, buckets,
-                                      table_size, num_shards)
+                                      table_size, num_shards, quantize=quantize)
         s = svc.stats
         lanes = f"_s{num_shards}" if num_shards else ""
+        lanes += "_int8" if quantize else ""
         yield row(
             f"service_cnn_c{num_clients}_b{batch}{lanes}", s.e2e.p50,
             f"pkt_per_s={s.pkt_per_s:.0f};p99_e2e_us={s.e2e.p99:.0f};"

@@ -22,3 +22,26 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
 
 def row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.2f},{derived}"
+
+
+_QUANT_SCALES = None
+
+
+def quant_scales():
+    """Int8 scale table for the ``_int8`` twin rows: the persisted
+    calibration artifact's table when one exists for this backend, else a
+    quick traffic-sample fit.  Memoized — every suite in a run times the
+    same table, so f32/int8 row pairs differ only in the datapath."""
+    global _QUANT_SCALES
+    if _QUANT_SCALES is None:
+        from repro.runtime import autotune
+
+        calib = autotune.load_calibration()
+        if calib is not None and calib.quant_scales is not None:
+            _QUANT_SCALES = calib.quant_scales
+        else:
+            from repro.launch.calibrate import calibrate_quant_scales
+
+            _QUANT_SCALES = calibrate_quant_scales(steps=6,
+                                                   flow_models=("cnn",))
+    return _QUANT_SCALES

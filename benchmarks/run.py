@@ -98,6 +98,12 @@ def main(argv: list[str] | None = None) -> int:
                 error = repr(e)
                 failures.append((label, error))
                 print(f"{label},nan,ERROR={e!r}")
+            if error is None and not rows:
+                # A suite that silently emits nothing would hollow out the
+                # trajectory gate — treat it like a raise.
+                error = "no rows emitted"
+                failures.append((label, error))
+                print(f"{label},nan,ERROR='no rows emitted'")
             wall = time.perf_counter() - t0
             results.append({"suite": label, "wall_s": wall, "rows": rows,
                             "error": error})
@@ -112,7 +118,12 @@ def main(argv: list[str] | None = None) -> int:
             "runtime": {"policy": active.policy, "tau": active.tau,
                         "vpe_max_elems": active.vpe_max_elems,
                         "use_pallas": active.use_pallas,
-                        "interpret": active.interpret},
+                        "interpret": active.interpret,
+                        "quantize": active.quantize,
+                        "quant_impl": active.quant_impl,
+                        "quant_scales": (active.quant_scales.fingerprint
+                                         if active.quant_scales is not None
+                                         else None)},
             "created_unix": time.time(),
             "suites": results,
         }

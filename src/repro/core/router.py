@@ -35,6 +35,7 @@ from repro.runtime import (
     resolve_config,
     systolic_utilization,
 )
+from repro.runtime import quant as _quant
 from repro.runtime import routing as _routing
 
 __all__ = [
@@ -72,6 +73,52 @@ def _arype_mm(x: jax.Array, w: jax.Array, accum_dtype=jnp.float32) -> jax.Array:
     )
 
 
+def _apply_activation(out: jax.Array, activation: Optional[str]) -> jax.Array:
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation == "silu":
+        out = out * jax.nn.sigmoid(out)
+    elif activation == "gelu":
+        out = jax.nn.gelu(out)
+    return out
+
+
+def _resolve_quant_impl(cfg: RuntimeConfig, k: int) -> str:
+    """Pick the int8 execution encoding for a contraction depth ``k``.
+
+    "auto" emulates on CPU hosts, where XLA lowers int8 dots through a slow
+    generic path, and goes native elsewhere.  Emulation is only bit-exact to
+    int32 accumulation up to :data:`repro.runtime.quant.EMULATE_MAX_K`; deeper
+    contractions force the native encoding regardless."""
+    if k > _quant.EMULATE_MAX_K:
+        return "native"
+    if cfg.quant_impl != "auto":
+        return cfg.quant_impl
+    from repro.runtime import platform
+
+    return "emulate" if platform.backend() == "cpu" else "native"
+
+
+def _quantized_mm(x: jax.Array, w: jax.Array, scale_x, scale_w,
+                  path: str, cfg: RuntimeConfig) -> jax.Array:
+    """Int8 engine matmul: quantize operands to the symmetric grid (per-tensor
+    activation scale, per-tensor or per-output-channel weight scales),
+    contract with int32 accumulation (or its exact f32 emulation), dequantize
+    to f32.  The activation is applied by the caller, after dequant."""
+    k = x.shape[-1]
+    dq = jnp.asarray(_quant.dequant_row(scale_x, scale_w, w.shape[-1]))
+    if _resolve_quant_impl(cfg, k) == "emulate":
+        xq = _quant.quantize_f32int(x, scale_x)
+        wq = _quant.quantize_f32int(w, scale_w)
+        acc = _vpe_mm(xq, wq) if path == "vpe" else _arype_mm(xq, wq)
+    else:
+        xq = _quant.quantize_i8(x, scale_x)
+        wq = _quant.quantize_i8(w, scale_w)
+        acc = (_vpe_mm(xq, wq, jnp.int32) if path == "vpe"
+               else _arype_mm(xq, wq, jnp.int32))
+    return acc.astype(jnp.float32) * dq
+
+
 def matmul(
     x: jax.Array,
     w: jax.Array,
@@ -93,6 +140,14 @@ def matmul(
     kernels (TPU target; validated with ``interpret=True`` on CPU).
     Otherwise the two paths are expressed in jnp so XLA emits MXU dots vs
     VPU mul+reduce respectively.
+
+    With ``config.quantize`` the matmul runs in int8 operands / int32
+    accumulation, dequantized to f32 before the activation — but only when
+    the layer ``name`` has a calibrated entry in ``config.quant_scales``;
+    unnamed or uncalibrated matmuls execute the f32 path unchanged.  When a
+    :func:`repro.runtime.quant.record_scales` block is active and the call
+    is eager, the operands' max-abs statistics are recorded (that is the
+    calibration tap).
     """
     cfg = resolve_config(config)
     *batch, m, k = x.shape
@@ -102,10 +157,28 @@ def matmul(
     r = route if route is not None else _routing.route_matmul(m_eff, k, n, config=cfg, name=name)
     out_dtype = out_dtype or x.dtype
     acc = jnp.dtype(cfg.accum_dtype)
+    _quant.maybe_record(name, x, w)
+
+    qscales = (cfg.quant_scales.lookup(name, _routing.current_scope())
+               if cfg.quantize and cfg.quant_scales is not None else None)
 
     if cfg.use_pallas:
         x2 = x.reshape(-1, k)
-        if r.path == "vpe":
+        if qscales is not None:
+            sx, sw = qscales
+            if r.path == "vpe":
+                from repro.kernels.vpe_smallmm import vpe_matmul_q
+
+                out = vpe_matmul_q(x2, w, scale_x=sx, scale_w=sw,
+                                   activation=activation or "none",
+                                   out_dtype=out_dtype, interpret=cfg.interpret)
+            else:
+                from repro.kernels.arype_matmul import arype_matmul_q
+
+                out = arype_matmul_q(x2, w, scale_x=sx, scale_w=sw,
+                                     activation=activation or "none",
+                                     out_dtype=out_dtype, interpret=cfg.interpret)
+        elif r.path == "vpe":
             from repro.kernels.vpe_smallmm import vpe_matmul
 
             out = vpe_matmul(x2, w, activation=activation or "none",
@@ -117,11 +190,8 @@ def matmul(
                                out_dtype=out_dtype, interpret=cfg.interpret)
         return out.reshape(*batch, m, n)
 
-    out = _vpe_mm(x, w, acc) if r.path == "vpe" else _arype_mm(x, w, acc)
-    if activation == "relu":
-        out = jnp.maximum(out, 0.0)
-    elif activation == "silu":
-        out = out * jax.nn.sigmoid(out)
-    elif activation == "gelu":
-        out = jax.nn.gelu(out)
-    return out.astype(out_dtype)
+    if qscales is not None:
+        out = _quantized_mm(x, w, qscales[0], qscales[1], r.path, cfg)
+    else:
+        out = _vpe_mm(x, w, acc) if r.path == "vpe" else _arype_mm(x, w, acc)
+    return _apply_activation(out, activation).astype(out_dtype)

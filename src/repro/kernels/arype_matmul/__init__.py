@@ -1,2 +1,6 @@
-from repro.kernels.arype_matmul.ops import arype_matmul, arype_matmul_unfused
-from repro.kernels.arype_matmul.ref import ref_matmul
+from repro.kernels.arype_matmul.ops import (
+    arype_matmul,
+    arype_matmul_q,
+    arype_matmul_unfused,
+)
+from repro.kernels.arype_matmul.ref import ref_matmul, ref_quantized_matmul

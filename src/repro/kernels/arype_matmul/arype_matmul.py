@@ -47,6 +47,34 @@ def _mm_fused_kernel(x_ref, w_ref, o_ref, acc_ref, *, activation: str, n_k: int)
         o_ref[...] = out.astype(o_ref.dtype)
 
 
+def _mm_fused_q_kernel(x_ref, w_ref, dq_ref, o_ref, acc_ref, *, activation: str,
+                       n_k: int):
+    """Int8 variant of the fused kernel: int8 operand tiles, int32 VMEM
+    accumulator across the K grid, dequant + activation in the epilogue.
+    Mirrors the paper's fixed-point AryPE datapath (int MACs, one scale
+    multiply on the way out).  ``dq_ref`` is the (1, bn) dequant row —
+    ``scale_x * scale_w`` per output channel."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.int32
+    )
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _epilogue():
+        out = acc_ref[...].astype(jnp.float32) * dq_ref[0, :]
+        if activation == "relu":
+            out = jnp.maximum(out, 0.0)
+        elif activation == "silu":
+            out = out * jax.nn.sigmoid(out)
+        elif activation == "gelu":
+            out = jax.nn.gelu(out)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
 def _mm_partial_kernel(x_ref, w_ref, o_ref):
     """Unfused ablation: each (i, j, l) grid cell writes its own partial block
     to HBM (out has a leading K-blocks dim); aggregation is a separate pass."""
@@ -84,6 +112,45 @@ def mm_fused(
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(x, w)
+
+
+def mm_fused_q(
+    x_q: jax.Array,
+    w_q: jax.Array,
+    dequant: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    activation: str = "none",
+    out_dtype=jnp.float32,
+    interpret: bool = True,
+) -> jax.Array:
+    """Int8 x_q: (M, K) @ w_q: (K, N) -> f32-ish (M, N), int32 accumulation.
+
+    ``dequant`` is the (1, N) per-output-channel ``scale_x * scale_w`` row;
+    integer accumulation is exact, so block tiling/padding cannot perturb the
+    result (zero int8 pads contribute zero int32 products)."""
+    m, k = x_q.shape
+    k2, n = w_q.shape
+    assert k == k2, (x_q.shape, w_q.shape)
+    assert dequant.shape == (1, n), (dequant.shape, n)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (x_q.shape, w_q.shape, bm, bn, bk)
+    n_k = k // bk
+    kernel = functools.partial(_mm_fused_q_kernel, activation=activation, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+            pl.BlockSpec((1, bn), lambda i, j, l: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_q, w_q, dequant)
 
 
 def mm_unfused_partials(

@@ -10,6 +10,7 @@ import jax.numpy as jnp
 
 from repro.common.util import round_up
 from repro.kernels.arype_matmul import arype_matmul as _k
+from repro.runtime import quant as _quant
 
 
 def _pad2(x: jax.Array, m: int, n: int) -> jax.Array:
@@ -46,6 +47,39 @@ def arype_matmul(
     out = _k.mm_fused(
         xp, wp, bm=bm, bn=bn, bk=bk, activation=activation,
         out_dtype=out_dtype or x.dtype, interpret=interpret,
+    )
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale_x", "scale_w", "activation", "interpret", "out_dtype"))
+def arype_matmul_q(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    scale_x: float,
+    scale_w,
+    activation: str = "none",
+    out_dtype=None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Quantized (M, K) @ (K, N): f32 operands clip-rounded to symmetric int8
+    on the given per-layer scales (``scale_w`` a float or a per-output-channel
+    tuple), contracted with fused int32 accumulation, dequantized to
+    ``out_dtype`` before the activation.  Scales are static — they come from
+    a calibration artifact and are fixed per layer."""
+    m, k = x.shape
+    _, n = w.shape
+    xq = _quant.quantize_i8(x, scale_x)
+    wq = _quant.quantize_i8(w, scale_w)
+    dq = jnp.asarray(_quant.dequant_row(scale_x, scale_w, n))[None, :]
+    bm, bn, bk = _pick_blocks(m, k, n)
+    mp, kp, np_ = round_up(m, bm), round_up(k, bk), round_up(n, bn)
+    xq, wq = _pad2(xq, mp, kp), _pad2(wq, kp, np_)
+    dq = _pad2(dq, 1, np_)
+    out = _k.mm_fused_q(
+        xq, wq, dq, bm=bm, bn=bn, bk=bk,
+        activation=activation, out_dtype=out_dtype or x.dtype, interpret=interpret,
     )
     return out[:m, :n]
 

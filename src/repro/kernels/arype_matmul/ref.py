@@ -14,3 +14,25 @@ def ref_matmul(x: jax.Array, w: jax.Array, *, activation: str = "none", out_dtyp
     elif activation == "gelu":
         out = jax.nn.gelu(out)
     return out.astype(out_dtype or x.dtype)
+
+
+def ref_quantized_matmul(x, w, *, scale_x: float, scale_w,
+                         activation: str = "none"):
+    """NumPy int32 oracle for the quantized engine paths: symmetric clip-round
+    to int8 codes, exact int32 accumulation, f32 dequant, then activation.
+    ``scale_w`` is a float or a per-output-channel tuple.  Integer
+    accumulation is order-independent, so every tiling/padding of the kernel
+    must match this bit-for-bit."""
+    import numpy as np
+
+    # Quantize in f32 exactly like the kernels do: the f64 division can round
+    # the other way on ties, which would make the oracle spuriously off-by-one.
+    sw = np.asarray(scale_w, np.float32)
+    xq = np.clip(np.round(np.asarray(x, np.float32) / np.float32(scale_x)),
+                 -127, 127).astype(np.int64)
+    wq = np.clip(np.round(np.asarray(w, np.float32) / sw),
+                 -127, 127).astype(np.int64)
+    out = (xq @ wq).astype(np.float32) * (np.float32(scale_x) * sw)
+    if activation == "relu":
+        out = np.maximum(out, 0.0)
+    return jnp.asarray(out)

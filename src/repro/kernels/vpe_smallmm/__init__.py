@@ -1,2 +1,2 @@
-from repro.kernels.vpe_smallmm.ops import vpe_matmul
+from repro.kernels.vpe_smallmm.ops import vpe_matmul, vpe_matmul_q
 from repro.kernels.vpe_smallmm.ref import ref_vpe_matmul

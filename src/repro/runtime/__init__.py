@@ -32,6 +32,7 @@ from repro.runtime.config import (
     runtime_overrides,
 )
 from repro.runtime.plan import PlannedMatmul, RoutePlan
+from repro.runtime.quant import QuantScales, record_scales
 
 
 def __getattr__(name: str):
@@ -58,6 +59,7 @@ __all__ = [
     "DEFAULT_RUNTIME",
     "POLICIES",
     "PlannedMatmul",
+    "QuantScales",
     "Route",
     "RouteRecord",
     "RoutePlan",
@@ -74,6 +76,7 @@ __all__ = [
     "octopus_runtime",
     "platform",
     "record_routes",
+    "record_scales",
     "resolve_config",
     "route_matmul",
     "runtime_overrides",

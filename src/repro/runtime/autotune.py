@@ -33,6 +33,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.runtime import platform
 from repro.runtime.config import RuntimeConfig, current_runtime
+from repro.runtime.quant import QuantScales
 from repro.runtime.routing import mxu_utilization
 
 SCHEMA_VERSION = 1
@@ -75,7 +76,11 @@ class ShapeTiming:
 
 @dataclass(frozen=True)
 class Calibration:
-    """A fitted, persistable crossover measurement for one backend."""
+    """A fitted, persistable crossover measurement for one backend.
+
+    ``quant_scales`` optionally carries the per-layer int8 scales fitted from
+    a traffic sample (``repro.launch.calibrate --quant``); older artifacts
+    without the key load as None and quantized configs fall back to f32."""
 
     tau: float
     vpe_max_elems: int
@@ -83,6 +88,7 @@ class Calibration:
     timings: Tuple[ShapeTiming, ...] = ()
     schema_version: int = SCHEMA_VERSION
     created_unix: float = field(default_factory=time.time)
+    quant_scales: Optional[QuantScales] = None
 
     @property
     def backend(self) -> str:
@@ -96,8 +102,13 @@ class Calibration:
         """``base`` (ambient runtime when None) with the measured thresholds
         and this calibration's fingerprint stamped on."""
         cfg = base if base is not None else current_runtime()
-        return cfg.replace(tau=self.tau, vpe_max_elems=self.vpe_max_elems,
-                           calibration=self.fingerprint_id)
+        kw = dict(tau=self.tau, vpe_max_elems=self.vpe_max_elems,
+                  calibration=self.fingerprint_id)
+        if self.quant_scales is not None:
+            # Scales travel with the artifact; actually *running* int8 stays
+            # an explicit opt-in via RuntimeConfig.quantize.
+            kw["quant_scales"] = self.quant_scales
+        return cfg.replace(**kw)
 
     def to_dict(self) -> dict:
         return asdict(self)
@@ -105,10 +116,12 @@ class Calibration:
     @classmethod
     def from_dict(cls, d: dict) -> "Calibration":
         timings = tuple(ShapeTiming(**t) for t in d.get("timings", ()))
+        qs = d.get("quant_scales")
         return cls(tau=float(d["tau"]), vpe_max_elems=int(d["vpe_max_elems"]),
                    fingerprint=dict(d["fingerprint"]), timings=timings,
                    schema_version=int(d["schema_version"]),
-                   created_unix=float(d.get("created_unix", 0.0)))
+                   created_unix=float(d.get("created_unix", 0.0)),
+                   quant_scales=QuantScales.from_dict(qs) if qs else None)
 
 
 # ---------------------------------------------------------------------------

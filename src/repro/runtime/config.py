@@ -44,8 +44,10 @@ from functools import lru_cache
 from typing import Any, Iterator, Optional
 
 from repro.runtime import platform
+from repro.runtime.quant import QuantScales
 
 POLICIES = ("collaborative", "arype_only", "vpe_only")
+QUANT_IMPLS = ("auto", "native", "emulate")
 
 
 @dataclass(frozen=True)
@@ -68,6 +70,18 @@ class RuntimeConfig:
       * ``accum_dtype`` — accumulation dtype name for both engine paths.
       * ``fused_aggregation`` — fuse K-block partial aggregation (False
         reproduces the paper's "wo/ collaborating" ablation).
+
+    Quantization (the paper's fixed-point datapath):
+      * ``quantize`` — run engine matmuls in int8 operands / int32 accum,
+        dequantized to f32 on the way out.  A matmul quantizes only when its
+        layer name has an entry in ``quant_scales``; unnamed or uncalibrated
+        matmuls stay f32 (never silently mis-scaled).
+      * ``quant_scales`` — the per-layer :class:`repro.runtime.quant.QuantScales`
+        table from calibration (reports show its ``fingerprint``).
+      * ``quant_impl`` — "native" (int8 dot, int32 preferred type), "emulate"
+        (integer grid in f32 lanes — bit-exact to int32 accum for engine K
+        depths, fast where XLA lacks int8 MACs), or "auto" (emulate on CPU
+        hosts, native elsewhere).
     """
 
     policy: str = "collaborative"
@@ -80,6 +94,9 @@ class RuntimeConfig:
     accum_dtype: str = "float32"
     fused_aggregation: bool = True
     calibration: Optional[str] = None
+    quantize: bool = False
+    quant_scales: Optional[QuantScales] = None
+    quant_impl: str = "auto"
 
     def __post_init__(self):
         if self.policy not in POLICIES:
@@ -88,6 +105,9 @@ class RuntimeConfig:
             raise ValueError(f"tau must be in (0, 1], got {self.tau}")
         if self.mxu_tile <= 0 or self.fill_depth <= 0 or self.vpe_max_elems <= 0:
             raise ValueError("mxu_tile, fill_depth and vpe_max_elems must be positive")
+        if self.quant_impl not in QUANT_IMPLS:
+            raise ValueError(
+                f"quant_impl must be one of {QUANT_IMPLS}, got {self.quant_impl!r}")
 
     def replace(self, **overrides: Any) -> "RuntimeConfig":
         return dataclasses.replace(self, **overrides) if overrides else self
@@ -98,12 +118,27 @@ class RuntimeConfig:
         crossover artifact at ``path`` (default: this platform's cache path,
         see :func:`repro.runtime.autotune.load_calibration`).  Falls back to
         the analytic defaults — with the loader's warning — when no usable
-        artifact exists; ``calibration`` is None in that case."""
+        artifact exists; ``calibration`` is None in that case.
+
+        ``quantize=True`` additionally requires per-layer scales in the
+        artifact: when they are absent (old artifact, or a corrupt/missing
+        one that already fell back) the config warns and stays f32 rather
+        than running mis-scaled int8."""
+        import warnings
+
         from repro.runtime import autotune
 
         calib = autotune.load_calibration(path)
         base = calib.apply(cls()) if calib is not None else cls()
-        return base.replace(**overrides)
+        cfg = base.replace(**overrides)
+        if cfg.quantize and cfg.quant_scales is None:
+            warnings.warn(
+                "quantize=True requested but the calibration artifact carries "
+                "no quant_scales; falling back to the f32 datapath "
+                "(re-run repro.launch.calibrate to fit int8 scales)",
+                UserWarning, stacklevel=2)
+            cfg = cfg.replace(quantize=False)
+        return cfg
 
     @classmethod
     def from_arch(cls, arch: Any, **overrides: Any) -> "RuntimeConfig":

@@ -38,6 +38,7 @@ class PlannedMatmul:
     k: int
     n: int
     route: routing.Route
+    quantized: bool = False
 
     @property
     def shape(self) -> Tuple[int, int, int]:
@@ -66,7 +67,9 @@ class RoutePlan:
         """Build a plan from explicit ``(name, M, K, N)`` layer shapes."""
         cfg = config if config is not None else current_runtime()
         steps = tuple(
-            PlannedMatmul(name, m, k, n, routing.route_matmul(m, k, n, config=cfg))
+            PlannedMatmul(name, m, k, n, routing.route_matmul(m, k, n, config=cfg),
+                          bool(cfg.quantize and cfg.quant_scales is not None
+                               and cfg.quant_scales.lookup(name) is not None))
             for name, m, k, n in layers
         )
         return cls(cfg, steps)
@@ -82,7 +85,7 @@ class RoutePlan:
         with octopus_runtime(cfg), routing.record_routes() as records:
             jax.eval_shape(fn, *args, **kwargs)
         steps = tuple(
-            PlannedMatmul(r.name or f"mm{i}", r.m, r.k, r.n, r.route)
+            PlannedMatmul(r.name or f"mm{i}", r.m, r.k, r.n, r.route, r.quantized)
             for i, r in enumerate(records)
         )
         return cls(cfg, steps)
@@ -124,6 +127,8 @@ class RoutePlan:
                 f"tau={cfg.tau} mxu_tile={cfg.mxu_tile} fill_depth={cfg.fill_depth}")
         if cfg.calibration:
             head += f" [calibrated: {cfg.calibration}]"
+        if cfg.quantize and cfg.quant_scales is not None:
+            head += f" [quantize: {cfg.quant_scales.fingerprint}]"
         if not self.steps:
             return head + "\n  (empty)"
         name_w = max(len(s.name) for s in self.steps)
@@ -131,11 +136,16 @@ class RoutePlan:
         lines = [head]
         for s in self.steps:
             shape = f"({s.m},{s.k},{s.n})"
+            dtype = "int8" if s.quantized else "f32"
             lines.append(f"  {s.name:<{name_w}}  {shape:<{shape_w}}  "
-                         f"{s.engine:<5}  util={s.route.util:6.3f}  {s.route.reason}")
+                         f"{s.engine:<5}  {dtype:<4}  util={s.route.util:6.3f}  "
+                         f"{s.route.reason}")
         total = self.macs() or 1
         ary, vpe = self.macs("arype"), self.macs("vpe")
         n_ary = sum(1 for s in self.steps if s.engine == "arype")
+        n_q = sum(1 for s in self.steps if s.quantized)
         lines.append(f"  -- arype: {n_ary} matmuls ({100 * ary / total:.1f}% of MACs) | "
                      f"vpe: {len(self.steps) - n_ary} matmuls ({100 * vpe / total:.1f}% of MACs)")
+        if n_q:
+            lines.append(f"  -- int8: {n_q}/{len(self.steps)} matmuls quantized")
         return "\n".join(lines)

@@ -1,0 +1,240 @@
+"""Int8 symmetric quantization for the engine datapath (the paper's fixed
+point).
+
+The FPGA Octopus computes its engine matmuls in fixed point; this module
+carries the pieces that make the same numerics portable across our backends:
+
+  * :class:`QuantScales` — the per-layer symmetric scale table.  One entry
+    per routed matmul name (``w0``..``w3``, ``conv1``..``linear``, ...),
+    holding the activation and weight scales picked by calibration.  It is
+    a frozen, hashable value so it can live on the (frozen, hashable)
+    :class:`repro.runtime.RuntimeConfig`; the artifact only ever shows the
+    short ``fingerprint`` in reports.
+  * :func:`quantize_i8` / :func:`quantize_f32int` — the two encodings of the
+    same integer grid.  ``i8`` is the native operand dtype for backends with
+    int8 MACs (TPU MXU, the Pallas kernels); ``f32int`` keeps the clipped,
+    rounded integers in f32 lanes.  For every engine shape in this repo the
+    contraction depth K is far below :data:`EMULATE_MAX_K`, so an f32 dot of
+    ``f32int`` operands is **bit-exact** to the int32 accumulation — products
+    are ≤ 127², and K of them sum below 2^24, inside f32's exact-integer
+    range.  That is how CPU backends (where XLA emulates int8 dots slowly)
+    get the paper's fixed-point *numerics* without paying an emulation tax.
+  * :func:`record_scales` — an eager-only recorder that ``router.matmul``
+    feeds max-abs statistics into; the calibration pass in
+    :mod:`repro.launch.calibrate` drives a traffic sample through the
+    engines under this context and turns the recorder into a
+    :class:`QuantScales`.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from contextlib import contextmanager
+from contextvars import ContextVar
+from dataclasses import dataclass
+from typing import Dict, Iterator, Mapping, Optional, Tuple
+
+Q_MAX = 127  # symmetric int8 grid: codes in [-127, 127] (no -128, keeps |q| symmetric)
+
+# Largest contraction depth for which sum_K (127 * 127) stays below 2^24,
+# f32's exact-integer range: an f32 dot of integer-valued operands is then
+# bit-exact to int32 accumulation.  Every engine K in this repo is <= 256.
+EMULATE_MAX_K = (1 << 24) // (Q_MAX * Q_MAX)  # 1040
+
+_EPS = 1e-8
+
+
+def pick_scale(max_abs: float) -> float:
+    """Symmetric per-tensor scale from a max-abs statistic (zero-guarded)."""
+    return max(float(max_abs), _EPS) / Q_MAX
+
+
+#: A weight scale is either per-tensor (one float) or per-output-channel
+#: (one float per N column — the standard int8 scheme; channel scales fold
+#: into the post-accumulation dequant exactly, so the integer contraction is
+#: untouched).
+WeightScale = Tuple[float, ...]
+
+
+@dataclass(frozen=True)
+class QuantScales:
+    """Per-layer symmetric int8 scales: ``(name, scale_x, scale_w)`` entries.
+
+    ``scale_x`` quantizes the activation operand (per-tensor); ``scale_w``
+    the weight — a single float, or a tuple with one scale per output
+    channel (N column).  The dequantized output is
+    ``int32_accum * scale_x * scale_w[n]``.  Lookup tries the
+    routing-scope-qualified name first (``pkt/w0``) then the bare layer name
+    (``w0``), so one table serves both a composite pipeline trace and a bare
+    model call.
+    """
+
+    entries: Tuple[Tuple[str, float, object], ...]
+
+    def __post_init__(self):
+        seen = set()
+        for name, sx, sw in self.entries:
+            if not name or not isinstance(name, str):
+                raise ValueError(f"quant scale entry needs a layer name, got {name!r}")
+            if name in seen:
+                raise ValueError(f"duplicate quant scale entry for {name!r}")
+            seen.add(name)
+            sws = sw if isinstance(sw, tuple) else (sw,)
+            if not (sx > 0.0 and sws and all(s > 0.0 for s in sws)):
+                raise ValueError(
+                    f"quant scales must be positive, got {name!r}: ({sx}, {sw})")
+        object.__setattr__(self, "_map", {e[0]: (e[1], e[2]) for e in self.entries})
+
+    # ------------------------------------------------------------- queries
+    def lookup(self, name: Optional[str], scope: str = "") -> Optional[Tuple[float, float]]:
+        """``(scale_x, scale_w)`` for a routed matmul, or None (→ stay f32)."""
+        if not name:
+            return None
+        table: Dict[str, Tuple[float, float]] = self._map  # type: ignore[attr-defined]
+        if scope:
+            hit = table.get(f"{scope}{name}")
+            if hit is not None:
+                return hit
+        # A scoped execution name like "pkt/w0" falls back to its bare tail.
+        hit = table.get(name)
+        if hit is None and "/" in name:
+            hit = table.get(name.rsplit("/", 1)[-1])
+        return hit
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(e[0] for e in self.entries)
+
+    @property
+    def fingerprint(self) -> str:
+        """Short stable id for reports/artifacts (``int8/<10 hex>``)."""
+        blob = json.dumps(self.entries, sort_keys=True).encode()
+        return "int8/" + hashlib.sha256(blob).hexdigest()[:10]
+
+    def subset(self, names) -> "QuantScales":
+        """The table restricted to ``names`` (layers outside it stay f32) —
+        how the sensitivity pass in calibration prunes flip-prone layers."""
+        keep = set(names)
+        return QuantScales(tuple(e for e in self.entries if e[0] in keep))
+
+    # ---------------------------------------------------------- construction
+    @classmethod
+    def from_max_abs(cls, stats: Mapping[str, Tuple[float, object]]) -> "QuantScales":
+        """Build from ``{name: (max_abs_x, max_abs_w)}`` statistics; the
+        weight stat may be a scalar (per-tensor) or a per-output-channel
+        sequence."""
+        entries = []
+        for name, (mx, mw) in sorted(stats.items()):
+            sw = (tuple(pick_scale(v) for v in mw)
+                  if isinstance(mw, (tuple, list)) else pick_scale(mw))
+            entries.append((name, pick_scale(mx), sw))
+        return cls(tuple(entries))
+
+    # ------------------------------------------------------------ artifacts
+    def to_dict(self) -> dict:
+        return {"entries": [[n, sx, list(sw) if isinstance(sw, tuple) else sw]
+                            for n, sx, sw in self.entries]}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "QuantScales":
+        entries = []
+        for name, sx, sw in d["entries"]:
+            sw = tuple(float(v) for v in sw) if isinstance(sw, (tuple, list)) else float(sw)
+            entries.append((str(name), float(sx), sw))
+        return cls(tuple(entries))
+
+
+# --------------------------------------------------------------------------
+# Quantization primitives (jnp — imported lazily so config import stays light)
+
+
+def _scale_arr(scale):
+    """Scale as a jnp value: scalar, or an (N,) row for per-channel tuples
+    (divides the last axis — the output-channel dim of a (K, N) weight)."""
+    import jax.numpy as jnp
+
+    if isinstance(scale, tuple):
+        return jnp.asarray(scale, jnp.float32)
+    return jnp.float32(scale)
+
+
+def quantize_i8(v, scale):
+    """Clip-round to the symmetric int8 grid (native operand encoding)."""
+    import jax.numpy as jnp
+
+    return jnp.clip(jnp.round(v.astype(jnp.float32) / _scale_arr(scale)),
+                    -Q_MAX, Q_MAX).astype(jnp.int8)
+
+
+def quantize_f32int(v, scale):
+    """Same integer grid, kept in f32 lanes (exact-emulation encoding)."""
+    import jax.numpy as jnp
+
+    return jnp.clip(jnp.round(v.astype(jnp.float32) / _scale_arr(scale)),
+                    float(-Q_MAX), float(Q_MAX))
+
+
+def dequant_row(scale_x, scale_w, n: int):
+    """The (n,) f32 dequant vector ``scale_x * scale_w`` (broadcast scalars)."""
+    import numpy as np
+
+    return np.broadcast_to(
+        np.float32(scale_x) * np.asarray(scale_w, np.float32), (n,)).copy()
+
+
+# --------------------------------------------------------------------------
+# Calibration-time scale recording
+
+
+class ScaleRecorder:
+    """Accumulates per-layer max-abs stats from eager ``router.matmul`` calls:
+    a per-tensor activation max plus a per-output-channel weight max."""
+
+    def __init__(self) -> None:
+        self.stats: Dict[str, Tuple[float, Tuple[float, ...]]] = {}
+
+    def update(self, name: str, max_x: float, max_w) -> None:
+        mw_new = tuple(max_w) if isinstance(max_w, (tuple, list)) else (float(max_w),)
+        mx, mw = self.stats.get(name, (0.0, (0.0,) * len(mw_new)))
+        if len(mw) != len(mw_new):
+            raise ValueError(f"inconsistent weight width for {name!r}: "
+                             f"{len(mw)} vs {len(mw_new)}")
+        self.stats[name] = (max(mx, max_x),
+                            tuple(max(a, b) for a, b in zip(mw, mw_new)))
+
+    def scales(self) -> QuantScales:
+        return QuantScales.from_max_abs(self.stats)
+
+
+_scale_recorder: ContextVar[Optional[ScaleRecorder]] = ContextVar(
+    "quant_scale_recorder", default=None)
+
+
+@contextmanager
+def record_scales() -> Iterator[ScaleRecorder]:
+    """Collect max-abs stats from every *eager* routed matmul in the block.
+
+    Traced (jit/eval_shape) calls are skipped — tracers have no values — so a
+    calibration pass can freely mix jitted pipeline steps (ignored) with
+    eager engine applications (recorded).
+    """
+    rec = ScaleRecorder()
+    token = _scale_recorder.set(rec)
+    try:
+        yield rec
+    finally:
+        _scale_recorder.reset(token)
+
+
+def maybe_record(name: Optional[str], x, w) -> None:
+    """Feed one matmul's operands to the active recorder, if any (eager only)."""
+    rec = _scale_recorder.get()
+    if rec is None or not name:
+        return
+    import jax.numpy as jnp
+    from jax import core
+
+    if isinstance(x, core.Tracer) or isinstance(w, core.Tracer):
+        return
+    w_cols = jnp.max(jnp.abs(w), axis=tuple(range(w.ndim - 1)))  # per N column
+    rec.update(name, float(jnp.max(jnp.abs(x))),
+               tuple(float(v) for v in w_cols))

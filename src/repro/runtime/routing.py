@@ -32,13 +32,17 @@ class Route:
 
 @dataclass(frozen=True)
 class RouteRecord:
-    """One recorded placement decision (name may be auto-assigned later)."""
+    """One recorded placement decision (name may be auto-assigned later).
+
+    ``quantized`` marks decisions whose execution will take the int8 engine
+    path (config has ``quantize`` on and a scale entry for this name)."""
 
     name: Optional[str]
     m: int
     k: int
     n: int
     route: Route
+    quantized: bool = False
 
 
 _recorder: ContextVar[Optional[List[RouteRecord]]] = ContextVar("route_recorder", default=None)
@@ -68,6 +72,11 @@ def name_scope(label: str) -> Iterator[None]:
         yield
     finally:
         _name_scope.reset(token)
+
+
+def current_scope() -> str:
+    """The active :func:`name_scope` prefix ("" outside any scope)."""
+    return _name_scope.get()
 
 
 @contextmanager
@@ -126,5 +135,8 @@ def route_matmul(m: int, k: int, n: int, *, config: Optional[RuntimeConfig] = No
     if records is not None:
         scope = _name_scope.get()
         scoped = f"{scope}{name}" if name is not None else (scope or None)
-        records.append(RouteRecord(scoped, m, k, n, route))
+        quantized = bool(
+            cfg.quantize and cfg.quant_scales is not None
+            and cfg.quant_scales.lookup(name, scope) is not None)
+        records.append(RouteRecord(scoped, m, k, n, route, quantized))
     return route

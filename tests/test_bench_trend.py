@@ -1,0 +1,180 @@
+"""Bench trajectory CI gate: slim-point append, >25% pkt/s regression
+detection, the [bench-skip] escape hatch, and the run.py failure contract
+(raising suites AND silently-empty suites exit nonzero)."""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from tools import bench_trend  # noqa: E402
+
+
+def _artifact(pkt_per_s, extra_rows=()):
+    """A minimal benchmarks/run.py --json artifact with every tracked row at
+    ``pkt_per_s`` (plus any extra untracked rows)."""
+    rows = [{"name": name, "us_per_call": 100.0,
+             "derived": f"pkt_per_s={v};steps=24"}
+            for name, v in pkt_per_s.items()]
+    rows += [{"name": n, "us_per_call": 1.0, "derived": d}
+             for n, d in extra_rows]
+    return {"schema_version": 1, "smoke": True,
+            "platform": {"backend": "cpu"},
+            "suites": [{"suite": "pipeline(streaming)", "wall_s": 1.0,
+                        "rows": rows, "error": None}]}
+
+
+def _write_run(tmp_path, name, pkt_per_s, **kw):
+    path = str(tmp_path / name)
+    with open(path, "w") as f:
+        json.dump(_artifact(pkt_per_s, **kw), f)
+    return path
+
+
+def _tracked(v):
+    return {name: v for name in bench_trend.TRACKED}
+
+
+def test_append_then_check_two_point_trajectory_green(tmp_path, capsys):
+    traj = str(tmp_path / "traj")
+    run1 = _write_run(tmp_path, "r1.json", _tracked(1000))
+    assert bench_trend.main(["append", "--trajectory", traj, "--run", run1,
+                             "--label", "aaa"]) == 0
+    # flat-to-slightly-better second run passes the gate and appends
+    run2 = _write_run(tmp_path, "r2.json", _tracked(1050))
+    assert bench_trend.main(["check", "--trajectory", traj, "--run", run2]) == 0
+    assert bench_trend.main(["append", "--trajectory", traj, "--run", run2,
+                             "--label", "bbb"]) == 0
+    points = bench_trend.load_trajectory(traj)
+    assert [idx for idx, _ in points] == [1, 2]
+    assert points[1][1]["label"] == "bbb"
+    out = capsys.readouterr().out
+    assert "within threshold" in out
+
+
+def test_check_fails_on_tracked_drop(tmp_path, capsys):
+    traj = str(tmp_path / "traj")
+    run1 = _write_run(tmp_path, "r1.json", _tracked(1000))
+    bench_trend.main(["append", "--trajectory", traj, "--run", run1])
+    run2 = _write_run(tmp_path, "r2.json", _tracked(700))  # -30%
+    assert bench_trend.main(["check", "--trajectory", traj, "--run", run2]) == 1
+    out = capsys.readouterr().out
+    assert "REGRESSION" in out and "[bench-skip]" in out
+
+
+def test_skip_flag_reports_but_passes(tmp_path, capsys):
+    traj = str(tmp_path / "traj")
+    run1 = _write_run(tmp_path, "r1.json", _tracked(1000))
+    bench_trend.main(["append", "--trajectory", traj, "--run", run1])
+    run2 = _write_run(tmp_path, "r2.json", _tracked(500))
+    assert bench_trend.main(["check", "--trajectory", traj, "--run", run2,
+                             "--skip"]) == 0
+    assert "not failing" in capsys.readouterr().out
+
+
+def test_drop_within_threshold_passes(tmp_path):
+    traj = str(tmp_path / "traj")
+    run1 = _write_run(tmp_path, "r1.json", _tracked(1000))
+    bench_trend.main(["append", "--trajectory", traj, "--run", run1])
+    run2 = _write_run(tmp_path, "r2.json", _tracked(800))  # -20% < 25%
+    assert bench_trend.main(["check", "--trajectory", traj, "--run", run2]) == 0
+
+
+def test_untracked_rows_never_gate(tmp_path):
+    traj = str(tmp_path / "traj")
+    extra = (("pipeline_cnn_b32_segmented_x16_int8", "pkt_per_s=9000"),)
+    run1 = _write_run(tmp_path, "r1.json", _tracked(1000), extra_rows=extra)
+    bench_trend.main(["append", "--trajectory", traj, "--run", run1])
+    # the int8 twin row collapses; tracked rows hold -> still green
+    extra2 = (("pipeline_cnn_b32_segmented_x16_int8", "pkt_per_s=10"),)
+    run2 = _write_run(tmp_path, "r2.json", _tracked(1000), extra_rows=extra2)
+    assert bench_trend.main(["check", "--trajectory", traj, "--run", run2]) == 0
+    # and the untracked row never entered the slim points
+    (_, p), = bench_trend.load_trajectory(traj)
+    assert "pipeline_cnn_b32_segmented_x16_int8" not in p["rows"]
+
+
+def test_first_run_with_no_trajectory_is_green(tmp_path, capsys):
+    run1 = _write_run(tmp_path, "r1.json", _tracked(1000))
+    assert bench_trend.main(["check", "--trajectory", str(tmp_path / "none"),
+                             "--run", run1]) == 0
+    assert "no prior trajectory" in capsys.readouterr().out
+
+
+def test_append_rejects_artifact_without_tracked_rows(tmp_path):
+    path = str(tmp_path / "empty.json")
+    with open(path, "w") as f:
+        json.dump({"schema_version": 1, "suites": []}, f)
+    assert bench_trend.main(["append", "--trajectory", str(tmp_path / "t"),
+                             "--run", path]) == 1
+
+
+def test_unreadable_points_are_skipped(tmp_path):
+    traj = tmp_path / "traj"
+    traj.mkdir()
+    (traj / "BENCH_0001.json").write_text("{not json")
+    (traj / "BENCH_0002.json").write_text(json.dumps({"schema_version": 99}))
+    run1 = _write_run(tmp_path, "r1.json", _tracked(1000))
+    # both points unusable -> behaves like an empty trajectory
+    assert bench_trend.main(["check", "--trajectory", str(traj),
+                             "--run", run1]) == 0
+
+
+def test_summary_markdown_renders_curve(tmp_path, capsys):
+    traj = str(tmp_path / "traj")
+    for i, v in enumerate((1000, 1100)):
+        run = _write_run(tmp_path, f"r{i}.json", _tracked(v))
+        bench_trend.main(["append", "--trajectory", traj, "--run", run,
+                          "--label", f"sha{i}"])
+    capsys.readouterr()
+    assert bench_trend.main(["summary", "--trajectory", traj,
+                             "--markdown"]) == 0
+    out = capsys.readouterr().out
+    assert "### Bench trajectory (2 runs)" in out
+    assert "| 1 | sha0 |" in out and "| 2 | sha1 |" in out
+    assert "1000" in out and "1100" in out
+
+
+# ---------------------------------------------------------------------------
+# run.py failure contract
+# ---------------------------------------------------------------------------
+
+def _patched_run(monkeypatch, suites):
+    from benchmarks import run as bench_run
+
+    monkeypatch.setattr(bench_run, "_suites", lambda smoke: suites)
+    return bench_run
+
+
+def test_run_fails_when_suite_raises(tmp_path, monkeypatch, capsys):
+    def boom():
+        raise RuntimeError("suite exploded")
+        yield  # pragma: no cover
+
+    bench_run = _patched_run(monkeypatch, [("boom", boom)])
+    path = str(tmp_path / "bench.json")
+    assert bench_run.main(["--smoke", "--json", path]) == 1
+    artifact = json.load(open(path))
+    assert "suite exploded" in artifact["suites"][0]["error"]
+
+
+def test_run_fails_when_suite_emits_no_rows(tmp_path, monkeypatch, capsys):
+    bench_run = _patched_run(monkeypatch, [("silent", lambda: iter(()))])
+    path = str(tmp_path / "bench.json")
+    assert bench_run.main(["--smoke", "--json", path]) == 1
+    artifact = json.load(open(path))
+    assert artifact["suites"][0]["error"] == "no rows emitted"
+    assert "no rows emitted" in capsys.readouterr().out
+
+
+def test_run_artifact_records_quant_runtime(tmp_path, monkeypatch):
+    def one_row():
+        yield "r1,1.00,pkt_per_s=5"
+
+    bench_run = _patched_run(monkeypatch, [("ok", one_row)])
+    path = str(tmp_path / "bench.json")
+    assert bench_run.main(["--smoke", "--json", path]) == 0
+    artifact = json.load(open(path))
+    rt = artifact["runtime"]
+    assert rt["quantize"] is False and rt["quant_scales"] is None
+    assert rt["quant_impl"] in ("auto", "native", "emulate")

@@ -1,0 +1,205 @@
+"""Persistent bench trajectory: append smoke-bench runs to a directory of
+slim per-run points and gate regressions against the last point.
+
+The trajectory directory (CI: restored/saved via ``actions/cache``) holds one
+``BENCH_<index>.json`` per past bench-smoke run.  Each point carries just the
+tracked rows' throughput — not the full artifact — so the directory stays
+small enough to cache across hundreds of PRs.
+
+    python tools/bench_trend.py append  --trajectory DIR --run bench.json
+    python tools/bench_trend.py check   --trajectory DIR --run bench.json
+    python tools/bench_trend.py summary --trajectory DIR [--markdown]
+
+``check`` exits nonzero when any tracked row's pkt/s drops more than
+``--threshold`` (default 25%) against the previous point; ``--skip`` (CI: a
+``[bench-skip]`` commit-message tag) records the comparison but always exits
+zero.  Int8 twin rows are deliberately untracked: their trajectory is
+informational until a backend with a native int8 MXU path runs the job.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+import time
+
+SCHEMA_VERSION = 1
+
+# Gated rows: the single-lane/sharded segmented pipeline curve and the
+# 4-client service row — the repo's headline pkt/s numbers.
+TRACKED = (
+    "pipeline_cnn_lane128_segmented_s1",
+    "pipeline_cnn_lane128_segmented_s2",
+    "pipeline_cnn_lane128_segmented_s4",
+    "service_cnn_c4_b16",
+)
+
+_POINT_RE = re.compile(r"^BENCH_(\d+)\.json$")
+
+
+def _derived_metric(derived: str, key: str) -> float | None:
+    for part in derived.split(";"):
+        if part.startswith(key + "="):
+            try:
+                return float(part.split("=", 1)[1])
+            except ValueError:
+                return None
+    return None
+
+
+def extract_point(run_artifact: dict, label: str | None = None) -> dict:
+    """Slim trajectory point from a ``benchmarks/run.py --json`` artifact."""
+    rows = {}
+    for suite in run_artifact.get("suites", []):
+        for r in suite.get("rows", []):
+            if r.get("name") in TRACKED:
+                rows[r["name"]] = {
+                    "us_per_call": r.get("us_per_call"),
+                    "pkt_per_s": _derived_metric(r.get("derived", ""), "pkt_per_s"),
+                }
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "label": label or "",
+        "created_unix": time.time(),
+        "backend": (run_artifact.get("platform") or {}).get("backend"),
+        "rows": rows,
+    }
+
+
+def load_trajectory(traj_dir: str) -> list[tuple[int, dict]]:
+    """(index, point) pairs sorted by index; unreadable points are skipped."""
+    points = []
+    if not os.path.isdir(traj_dir):
+        return points
+    for name in os.listdir(traj_dir):
+        m = _POINT_RE.match(name)
+        if not m:
+            continue
+        try:
+            with open(os.path.join(traj_dir, name)) as f:
+                d = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            continue
+        if not isinstance(d, dict) or d.get("schema_version") != SCHEMA_VERSION:
+            continue
+        points.append((int(m.group(1)), d))
+    points.sort(key=lambda kv: kv[0])
+    return points
+
+
+def cmd_append(args) -> int:
+    with open(args.run) as f:
+        artifact = json.load(f)
+    point = extract_point(artifact, label=args.label)
+    if not point["rows"]:
+        print("[trend] run artifact has no tracked rows; nothing appended")
+        return 1
+    os.makedirs(args.trajectory, exist_ok=True)
+    points = load_trajectory(args.trajectory)
+    index = points[-1][0] + 1 if points else 1
+    path = os.path.join(args.trajectory, f"BENCH_{index:04d}.json")
+    with open(path, "w") as f:
+        json.dump(point, f, indent=1)
+    print(f"[trend] appended point {index} ({len(point['rows'])} tracked rows) "
+          f"-> {path}")
+    return 0
+
+
+def cmd_check(args) -> int:
+    with open(args.run) as f:
+        artifact = json.load(f)
+    current = extract_point(artifact)["rows"]
+    points = load_trajectory(args.trajectory)
+    if not points:
+        print("[trend] no prior trajectory point; nothing to gate against")
+        return 0
+    prev_idx, prev = points[-1]
+    regressions = []
+    for name in TRACKED:
+        now = (current.get(name) or {}).get("pkt_per_s")
+        was = (prev["rows"].get(name) or {}).get("pkt_per_s")
+        if now is None or was is None or was <= 0:
+            continue
+        delta = (now - was) / was
+        marker = " <-- REGRESSION" if delta < -args.threshold else ""
+        print(f"[trend] {name}: {was:.0f} -> {now:.0f} pkt/s "
+              f"({100 * delta:+.1f}% vs point {prev_idx}){marker}")
+        if delta < -args.threshold:
+            regressions.append((name, was, now, delta))
+    if regressions:
+        if args.skip:
+            print(f"[trend] {len(regressions)} regression(s) over the "
+                  f"{100 * args.threshold:.0f}% threshold — [bench-skip] "
+                  f"active, not failing")
+            return 0
+        print(f"[trend] FAIL: {len(regressions)} tracked row(s) dropped more "
+              f"than {100 * args.threshold:.0f}% (commit with [bench-skip] "
+              f"to override)")
+        return 1
+    print("[trend] all tracked rows within threshold")
+    return 0
+
+
+def cmd_summary(args) -> int:
+    points = load_trajectory(args.trajectory)
+    if not points:
+        print("no bench trajectory yet")
+        return 0
+    if args.markdown:
+        print(f"### Bench trajectory ({len(points)} runs)")
+        print()
+        header = ["run", "label"] + [n.replace("pipeline_cnn_", "").replace(
+            "service_cnn_", "svc_") for n in TRACKED]
+        print("| " + " | ".join(header) + " |")
+        print("|" + "---|" * len(header))
+        for idx, p in points:
+            cells = [str(idx), p.get("label") or "-"]
+            for name in TRACKED:
+                v = (p["rows"].get(name) or {}).get("pkt_per_s")
+                cells.append(f"{v:.0f}" if v is not None else "-")
+            print("| " + " | ".join(cells) + " |")
+        print()
+        print("_pkt/s per tracked row; gate fails on a >25% drop vs the "
+              "previous run ([bench-skip] overrides)._")
+    else:
+        for idx, p in points:
+            vals = "  ".join(
+                f"{name}={((p['rows'].get(name) or {}).get('pkt_per_s') or float('nan')):.0f}"
+                for name in TRACKED)
+            print(f"run {idx:4d} [{p.get('label') or '-'}]  {vals}")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("append", help="append a run artifact to the trajectory")
+    p.add_argument("--trajectory", required=True)
+    p.add_argument("--run", required=True, help="benchmarks/run.py --json artifact")
+    p.add_argument("--label", default=None, help="point label (CI: commit sha)")
+    p.set_defaults(fn=cmd_append)
+
+    p = sub.add_parser("check", help="gate a run against the last trajectory point")
+    p.add_argument("--trajectory", required=True)
+    p.add_argument("--run", required=True)
+    p.add_argument("--threshold", type=float, default=0.25,
+                   help="max tolerated fractional pkt/s drop (default 0.25)")
+    p.add_argument("--skip", action="store_true",
+                   help="report but never fail ([bench-skip] escape hatch)")
+    p.set_defaults(fn=cmd_check)
+
+    p = sub.add_parser("summary", help="print the pkt/s curve across runs")
+    p.add_argument("--trajectory", required=True)
+    p.add_argument("--markdown", action="store_true",
+                   help="GitHub step-summary table format")
+    p.set_defaults(fn=cmd_summary)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
