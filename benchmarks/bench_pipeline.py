@@ -32,7 +32,8 @@ from benchmarks.common import row  # noqa: E402
 def _bench_one(flow_model: str, steps: int, batch: int, max_ready: int,
                table_size: int, active_flows: int, tracker: str,
                scan_len: int, num_shards: int = 0, lane_batch=None,
-               seed: int = 0, quantize: bool = False):
+               seed: int = 0, quantize: bool = False, cold_size: int = 0,
+               cold_policy: str = "age", top_k=None, pay_bytes=None):
     import contextlib
 
     import jax
@@ -49,9 +50,14 @@ def _bench_one(flow_model: str, steps: int, batch: int, max_ready: int,
     from benchmarks.common import quant_scales
 
     kw = {} if flow_model == "cnn" else {"top_n": 8}
+    if top_k is not None:
+        kw["top_k"] = top_k
+    if pay_bytes is not None:
+        kw["pay_bytes"] = pay_bytes
     cfg = PipelineConfig(batch_size=batch, max_ready=max_ready,
                          flow_model=flow_model, table_size=table_size,
-                         tracker=tracker, scan_len=scan_len, **kw)
+                         tracker=tracker, scan_len=scan_len,
+                         cold_size=cold_size, cold_policy=cold_policy, **kw)
     pkt_params = paper_models.init_paper_model("mlp", jax.random.PRNGKey(0))
     flow_params = paper_models.init_paper_model(flow_model, jax.random.PRNGKey(1))
     # Pipelines capture the ambient runtime at construction, so the int8
@@ -67,7 +73,10 @@ def _bench_one(flow_model: str, steps: int, batch: int, max_ready: int,
             pipe = OctopusPipeline(pkt_params, flow_params, cfg)
     gen = TrafficGenerator(TrafficConfig(
         batch_size=batch, active_flows=active_flows, elephant_fraction=0.3,
-        table_size=table_size, seed=seed))
+        table_size=table_size, seed=seed, pay_bytes=cfg.pay_bytes,
+        # populations beyond the hot table (the two-level rows) need shared
+        # slots — that collision pressure is exactly what the cold store eats
+        collision_free=active_flows <= table_size))
     pipe.warmup()
     stats = pipe.run(gen, steps=steps)
     return pipe, stats
@@ -123,6 +132,25 @@ def run(steps: int = 48, smoke: bool = False):
             f"pkt_per_s={s.pkt_per_s:.0f};flow_per_s={s.flow_per_s:.1f};"
             f"steps={s.steps};dispatches={s.dispatches};flows={s.flows};"
             f"evicted={s.evicted};trace_count={pipe.trace_count}")
+
+    # ---- hierarchical flow table (hot + cold): effective capacity 10^5-10^6
+    # flows with a live population ~4x the hot table, so every step runs the
+    # full spill/promote machinery.  top_k/pay_bytes shrink to keep the cold
+    # bank's payload plane small (the cnn flow model never reads it).
+    cold_grid = ([(1024, 131072, 4096)] if smoke else
+                 [(1024, 0, 4096), (1024, 131072, 4096),
+                  (1024, 1048576, 4096)])
+    cold_steps = min(steps, 16) if smoke else min(steps, 24)
+    for hot, cold, population in cold_grid:
+        pipe, s = _bench_one("cnn", cold_steps, 128, 16, hot, population,
+                             "segmented", 1, cold_size=cold,
+                             top_k=1, pay_bytes=4)
+        yield row(
+            f"pipeline_cnn_b128_cold{cold}", s.step_us,
+            f"pkt_per_s={s.pkt_per_s:.0f};flow_per_s={s.flow_per_s:.1f};"
+            f"steps={s.steps};capacity={hot + cold};flows={s.flows};"
+            f"evicted={s.evicted};spilled={s.spilled};promoted={s.promoted};"
+            f"trace_count={pipe.trace_count}")
 
     shard_steps = min(steps, 24) if smoke else min(steps, 32)
     for per_lane, num_shards, lane_batch, table_size in _shard_grid(smoke):

@@ -1,4 +1,4 @@
 """The paper's primary contribution, in JAX: heterogeneous routed compute
 (VPE/AryPE), collaborative execution, feature extraction, flow tracking, and
 the control-domain decision module."""
-from repro.core import collaborative, decisions, feature_extractor, flow_tracker, router
+from repro.core import cold_store, collaborative, decisions, feature_extractor, flow_tracker, router

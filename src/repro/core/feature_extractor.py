@@ -132,7 +132,8 @@ def segmented_update(
     interpret: Optional[bool] = None,
     keep: Optional[jax.Array] = None,
     fallback: str = "auto",
-) -> tuple[ft.TrackerState, SegmentedOut]:
+    with_spills: bool = False,
+):
     """Merge a whole microbatch into the live tracker state in one vectorized
     pass — the TPU-parallel replacement for the per-packet scan.
 
@@ -156,6 +157,15 @@ def segmented_update(
     statically, for callers that hoist the :func:`batch_collisions`
     predicate outside a vmap.  ``"never"`` is only exact when the batch
     really has no in-batch collision — callers own that guard.
+
+    ``with_spills`` (static) additionally returns the merge's
+    :class:`~repro.core.flow_tracker.SpillRecords`, bit-identical to the
+    scan tracker's (differentially tested): a non-colliding slot's eviction
+    happens exactly at its segment-head packet, so the pre-batch occupant
+    scatters back to that packet's original batch position; colliding slots
+    take the scan fallback's per-packet records.  Returns
+    ``(state, SegmentedOut)`` by default,
+    ``(state, SegmentedOut, SpillRecords)`` under ``with_spills``.
     """
     if fallback not in FALLBACK_MODES:
         raise ValueError(f"fallback must be one of {FALLBACK_MODES}, "
@@ -288,9 +298,43 @@ def segmented_update(
     ev_nc = jnp.sum(evicted_f & ~collide).astype(jnp.int32)
     pkt_collides = collide[slots]  # original batch order
 
+    if with_spills:
+        # a non-colliding slot's eviction happens exactly at its segment-head
+        # packet (scan semantics: the first batch packet touching the slot
+        # displaces the stale occupant), so the pre-batch occupant snapshot
+        # scatters back to that packet's original batch position; colliding
+        # slots are overwritten per-packet by the scan fallback below
+        safe_sl = jnp.where(s_slot < F, s_slot, 0)
+        ev_head = first & (s_slot < F) & evicted_f[safe_sl]
+        pos = jnp.where(ev_head, order, P)
+
+        def scat_like(table):
+            return jnp.zeros((P,) + table.shape[1:], table.dtype).at[pos].set(
+                table[safe_sl], mode="drop")
+
+        seg_spills = ft.SpillRecords(
+            mask=jnp.zeros((P,), bool).at[pos].set(ev_head, mode="drop"),
+            slot=jnp.full((P,), F, jnp.int32).at[pos].set(s_slot, mode="drop"),
+            tuple_id=scat_like(state.tuple_id),
+            count=scat_like(state.count),
+            last_ts=scat_like(state.last_ts),
+            features=scat_like(state.features),
+            series=scat_like(state.series),
+            sizes=scat_like(state.sizes),
+            payload=scat_like(state.payload),
+        )
+    else:
+        seg_spills = None
+
     def with_fallback(_):
-        scan_state, outs = ft.process_packets(state, packets, program,
-                                              top_n=top_n, keep=keep)
+        if with_spills:
+            scan_state, outs, scan_spills = ft.process_packets(
+                state, packets, program, top_n=top_n, keep=keep,
+                with_spills=True)
+        else:
+            scan_state, outs = ft.process_packets(state, packets, program,
+                                                  top_n=top_n, keep=keep)
+            scan_spills = None
 
         def pick(seg_leaf, scan_leaf):
             m = collide.reshape((F,) + (1,) * (seg_leaf.ndim - 1))
@@ -299,20 +343,30 @@ def segmented_update(
         merged = jax.tree_util.tree_map(pick, seg_state, scan_state)
         new = new_nc + jnp.sum(outs.new_flow & pkt_collides).astype(jnp.int32)
         ev = ev_nc + jnp.sum(outs.evicted & pkt_collides).astype(jnp.int32)
-        return merged, new, ev
+        if not with_spills:
+            return merged, new, ev, None
+
+        def pick_pkt(seg_leaf, scan_leaf):
+            m = pkt_collides.reshape((P,) + (1,) * (seg_leaf.ndim - 1))
+            return jnp.where(m, scan_leaf, seg_leaf)
+
+        return merged, new, ev, jax.tree_util.tree_map(pick_pkt, seg_spills,
+                                                       scan_spills)
 
     def without_fallback(_):
-        return seg_state, new_nc, ev_nc
+        return seg_state, new_nc, ev_nc, seg_spills
 
     if fallback == "always":
-        state1, new_flows, evicted = with_fallback(None)
+        state1, new_flows, evicted, spills = with_fallback(None)
     elif fallback == "never":
-        state1, new_flows, evicted = without_fallback(None)
+        state1, new_flows, evicted, spills = without_fallback(None)
     else:
-        state1, new_flows, evicted = lax.cond(collide.any(), with_fallback,
-                                              without_fallback, operand=None)
+        state1, new_flows, evicted, spills = lax.cond(
+            collide.any(), with_fallback, without_fallback, operand=None)
     out = SegmentedOut(new_flows=new_flows, evicted=evicted,
                        fallback_slots=jnp.sum(collide).astype(jnp.int32))
+    if with_spills:
+        return state1, out, spills
     return state1, out
 
 

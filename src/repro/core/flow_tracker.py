@@ -112,6 +112,23 @@ class StepOut(NamedTuple):
     arv_intv: jax.Array  # inter-arrival time seen by the tracker (0 at establish)
 
 
+class SpillRecords(NamedTuple):
+    """One row per batch packet: the flow state an eviction overwrote, read
+    out *before* the establishing write (the cold store's insert feed).  Rows
+    with ``mask == False`` are padding (slot == table_size, data zeros); the
+    scan and segmented trackers emit bit-identical records (tested)."""
+
+    mask: jax.Array  # (P,) bool — this packet evicted a live flow
+    slot: jax.Array  # (P,) int32; table_size for padding rows
+    tuple_id: jax.Array  # (P,) int32
+    count: jax.Array  # (P,) int32
+    last_ts: jax.Array  # (P,) int32
+    features: jax.Array  # (P, 16) int32
+    series: jax.Array  # (P, top_n) int32
+    sizes: jax.Array  # (P, top_n) int32
+    payload: jax.Array  # (P, top_k, pay_bytes) int32
+
+
 def process_packets(
     state: TrackerState,
     packets: PacketBatch,
@@ -119,7 +136,8 @@ def process_packets(
     *,
     top_n: int,
     keep: Optional[jax.Array] = None,
-) -> tuple[TrackerState, StepOut]:
+    with_spills: bool = False,
+):
     """Order-exact oracle: lax.scan over packets (the FPGA processes packets
     serially at line rate).  See feature_extractor.extract_segmented for the
     TPU-parallel path.
@@ -129,7 +147,11 @@ def process_packets(
     the out-of-range sentinel slot ``table_size`` and is dropped) and its
     :class:`StepOut` row is neutral (slot == table_size, all flags False).
     This is how the sharded lanes process hash-partitioned microbatches whose
-    static per-lane shape is padded."""
+    static per-lane shape is padded.
+
+    With ``with_spills=True`` (a static trace-time flag — the default trace
+    is unchanged) the return gains a third element: :class:`SpillRecords`
+    capturing every evicted flow's pre-overwrite state, in packet order."""
     table_size = state.tuple_id.shape[0]
     top_k = state.payload.shape[1]
     if keep is None:
@@ -173,18 +195,47 @@ def process_packets(
         )
         out = StepOut(slot=upd, ready=k & (count1 == top_n), new_flow=k & is_new,
                       evicted=k & evict, arv_intv=jnp.where(k, arv_intv, 0))
-        return st1, out
+        if not with_spills:
+            return st1, out
+        # snapshot the evicted occupant BEFORE the establishing write above
+        # overwrote it (we read from `st`, the pre-packet state)
+        sp = k & evict
 
-    return lax.scan(step, state, (packets, keep))
+        def grab(leaf):
+            return jnp.where(sp, leaf[slot], 0)  # scalar mask broadcasts
+
+        spill = SpillRecords(
+            mask=sp, slot=jnp.where(sp, slot, table_size),
+            tuple_id=grab(st.tuple_id), count=grab(st.count),
+            last_ts=grab(st.last_ts), features=grab(st.features),
+            series=grab(st.series), sizes=grab(st.sizes),
+            payload=grab(st.payload))
+        return st1, (out, spill)
+
+    if not with_spills:
+        return lax.scan(step, state, (packets, keep))
+    state1, (out, spills) = lax.scan(step, state, (packets, keep))
+    return state1, out, spills
 
 
 def release_flows(state: TrackerState, slots: jax.Array) -> TrackerState:
     """FIN handling: computing finished for these slots; recycle storage
     (paper: 'read out the top address in in-flight FIFO and set packet
-    numbers in this address to zero')."""
+    numbers in this address to zero').
+
+    Recycles ALL seven leaves (a slot that keeps stale tuple_id / series /
+    sizes / payload poisons the next flow established there) and scatters
+    with ``mode="drop"`` so the ``table_size`` padding sentinel is a no-op
+    instead of clamping onto — and wiping — the last table slot."""
     return state._replace(
-        count=state.count.at[slots].set(0),
-        features=state.features.at[slots].set(fresh_feature_word()),
+        tuple_id=state.tuple_id.at[slots].set(0, mode="drop"),
+        count=state.count.at[slots].set(0, mode="drop"),
+        last_ts=state.last_ts.at[slots].set(0, mode="drop"),
+        features=state.features.at[slots].set(fresh_feature_word(),
+                                              mode="drop"),
+        series=state.series.at[slots].set(0, mode="drop"),
+        sizes=state.sizes.at[slots].set(0, mode="drop"),
+        payload=state.payload.at[slots].set(0, mode="drop"),
     )
 
 

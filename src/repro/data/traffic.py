@@ -105,22 +105,24 @@ def partition_batch(batch: PacketBatch, num_shards: int, *,
 
     out = []
     for r in range(rounds):
-        keep = np.zeros((num_shards, cap), bool)
+        # NOT named `keep`: shadowing the parameter would silently break any
+        # later read of the caller's mask (ruff PLR1704 guards this repo-wide)
+        keep_rows = np.zeros((num_shards, cap), bool)
         src = np.full((num_shards, cap), n, np.int32)
         for s, ix in enumerate(lanes):
             window = ix[r * cap:(r + 1) * cap]
-            keep[s, : len(window)] = True
+            keep_rows[s, : len(window)] = True
             src[s, : len(window)] = window
         take = np.minimum(src, n - 1)  # padding rows read row n-1, then zeroed
 
         def gather(a):
             g = a[take]
             return jnp.asarray(np.where(
-                keep.reshape(keep.shape + (1,) * (g.ndim - 2)), g, 0))
+                keep_rows.reshape(keep_rows.shape + (1,) * (g.ndim - 2)), g, 0))
 
         out.append(ShardedBatch(
             shards=PacketBatch(*(gather(a) for a in arrays)),
-            keep=jnp.asarray(keep), src=jnp.asarray(src)))
+            keep=jnp.asarray(keep_rows), src=jnp.asarray(src)))
     return out
 
 
@@ -179,6 +181,7 @@ class TrafficGenerator:
         self.flows_started = 0
         self.flows_completed = 0
         self._live_slots: set[int] = set()
+        self._live_hashes: set[int] = set()
         self._flows = [self._spawn_flow() for _ in range(cfg.active_flows)]
 
     # ------------------------------------------------------------- population
@@ -187,11 +190,17 @@ class TrafficGenerator:
         for _ in range(64 * max(c.table_size, 1)):
             h = int(self.rng.integers(1, 2**31 - 1))
             slot = hash_slot_scalar(h, c.table_size)
-            if not c.collision_free or slot not in self._live_slots:
+            # live tuple hashes must be unique in EVERY mode (two live flows
+            # sharing a hash silently merge in the tracker while the
+            # generator's flows_started / class labels count two); slot
+            # uniqueness is the stricter extra constraint of collision_free
+            if h not in self._live_hashes and (
+                    not c.collision_free or slot not in self._live_slots):
                 break
         else:  # pragma: no cover - astronomically unlikely under the guard
             raise RuntimeError("could not find a collision-free slot")
         self._live_slots.add(slot)
+        self._live_hashes.add(h)
 
         elephant = self.rng.random() < c.elephant_fraction
         lo, hi = c.elephant_pkts if elephant else c.mice_pkts
@@ -208,6 +217,7 @@ class TrafficGenerator:
     def _retire(self, idx: int) -> None:
         f = self._flows[idx]
         self._live_slots.discard(f.slot)
+        self._live_hashes.discard(f.tuple_hash)
         self.flows_completed += 1
         self._flows[idx] = self._spawn_flow()
 

@@ -51,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.core import cold_store
 from repro.core import decisions
 from repro.core import feature_extractor as fx
 from repro.core import flow_tracker as ft
@@ -76,6 +77,8 @@ class PipelineConfig:
     pay_bytes: int = paper_models.TF_BYTES  # payload bytes per packet
     tracker: str = "segmented"  # "segmented" (vectorized) | "scan" (oracle)
     scan_len: int = 1  # microbatches fused per dispatch (lax.scan length)
+    cold_size: int = 0  # second-level (cold) flow table slots; 0 disables
+    cold_policy: str = "age"  # cold eviction policy: "age" | "lru"
 
     def __post_init__(self):
         if self.flow_model not in FLOW_MODELS:
@@ -89,6 +92,12 @@ class PipelineConfig:
                              "(max_ready <= table_size)")
         if self.scan_len <= 0:
             raise ValueError(f"scan_len must be positive, got {self.scan_len}")
+        if self.cold_size < 0:
+            raise ValueError(f"cold_size must be >= 0, got {self.cold_size}")
+        if self.cold_policy not in cold_store.COLD_POLICIES:
+            raise ValueError(f"cold_policy must be one of "
+                             f"{cold_store.COLD_POLICIES}, "
+                             f"got {self.cold_policy!r}")
         # the flow engine consumes the tracker memories directly — their
         # depths must match the model's fixed input geometry
         if self.flow_model == "cnn" and self.top_n != paper_models.CNN_SEQ:
@@ -114,6 +123,8 @@ class PipelineStepOutput(NamedTuple):
     flow_cls: jax.Array  # (max_ready,) int32
     new_flows: jax.Array  # () int32 — flows established this step
     evicted: jax.Array  # () int32 — stale flows recycled by collision
+    spilled: jax.Array  # () int32 — evictions spilled into the cold store
+    promoted: jax.Array  # () int32 — cold entries promoted back into hot
 
 
 class LatencyReservoir:
@@ -184,6 +195,8 @@ class PipelineStats:
     flows: int = 0  # ready flows emitted + classified
     new_flows: int = 0
     evicted: int = 0
+    spilled: int = 0  # evictions captured by the cold store (cold_size > 0)
+    promoted: int = 0  # cold entries re-established into hot
     dispatches: int = 0  # host->device round-trips (chunking lowers it below
     # steps; sharded overflow rounds raise it above)
     padded: int = 0  # dispatched-but-masked lane rows (sharding skew cost)
@@ -192,6 +205,7 @@ class PipelineStats:
     def record_dispatch(self, dt: float, *, packets: int, steps: int = 1,
                         dispatches: int = 1, flows: int = 0,
                         new_flows: int = 0, evicted: int = 0,
+                        spilled: int = 0, promoted: int = 0,
                         padded: int = 0) -> None:
         """Fold one timed dispatch (or fused multi-step chunk) into the
         counters.  ``packets`` must be the real packet count — callers that
@@ -203,6 +217,8 @@ class PipelineStats:
         self.flows += flows
         self.new_flows += new_flows
         self.evicted += evicted
+        self.spilled += spilled
+        self.promoted += promoted
         self.padded += padded
         self.lat.add(dt * 1e6)  # one sample per timed region (us)
 
@@ -273,48 +289,99 @@ class OctopusPipeline:
         self._warm_buckets: set[int] = set()  # bucket sizes compiled so far
 
     # ------------------------------------------------------------ traced core
-    def _fresh_state(self) -> ft.TrackerState:
+    def _fresh_state(self):
         """State factory shared by construction, warmup scratch and reset —
-        overridable (the sharded pipeline stacks per-lane banks here)."""
-        return ft.init_state(self.cfg.table_size, self.cfg.top_n,
-                             self.cfg.top_k, self.cfg.pay_bytes)
+        overridable (the sharded pipeline stacks per-lane banks here).
+        Returns a plain :class:`~repro.core.flow_tracker.TrackerState` in
+        hot-only mode (``cold_size == 0`` — byte-identical to the
+        single-level pipeline), a :class:`~repro.core.cold_store.TwoLevelState`
+        with the cold table attached otherwise."""
+        hot = ft.init_state(self.cfg.table_size, self.cfg.top_n,
+                            self.cfg.top_k, self.cfg.pay_bytes)
+        if not self.cfg.cold_size:
+            return hot
+        return cold_store.TwoLevelState(
+            hot=hot, cold=cold_store.init_cold(
+                self.cfg.cold_size, self.cfg.top_n, self.cfg.top_k,
+                self.cfg.pay_bytes))
 
-    def _track(self, state: ft.TrackerState, packets: ft.PacketBatch,
-               keep: Optional[jax.Array] = None, *,
-               fallback: str = "auto") -> tuple[ft.TrackerState,
-                                                jax.Array, jax.Array]:
-        """Step 2 only: merge one (optionally masked) microbatch into the
-        tracker under ``cfg.tracker``.  Returns (state, new_flows, evicted) —
-        the merge half of the lane contract, dispatched on its own by the
-        sharded pipeline's overflow rounds.  ``fallback`` is forwarded to
-        the segmented tracker's collision branch (vmapped callers hoist it)."""
+    def _merge(self, hot: ft.TrackerState, packets: ft.PacketBatch,
+               keep: Optional[jax.Array], *, fallback: str,
+               with_spills: bool = False):
+        """The raw tracker merge under ``cfg.tracker``: returns
+        ``(hot, new, evicted)`` (plus the spill records when asked)."""
         if self.cfg.tracker == "segmented":
-            state, seg = fx.segmented_update(
-                state, packets, self.program, top_n=self.cfg.top_n,
+            out = fx.segmented_update(
+                hot, packets, self.program, top_n=self.cfg.top_n,
                 use_pallas=self.runtime.use_pallas,
                 interpret=self.runtime.interpret, keep=keep,
-                fallback=fallback)
-            return state, seg.new_flows, seg.evicted
-        state, outs = ft.process_packets(state, packets, self.program,
-                                         top_n=self.cfg.top_n, keep=keep)
-        return (state, outs.new_flow.sum().astype(jnp.int32),
+                fallback=fallback, with_spills=with_spills)
+            if with_spills:
+                hot, seg, spills = out
+                return hot, seg.new_flows, seg.evicted, spills
+            hot, seg = out
+            return hot, seg.new_flows, seg.evicted
+        out = ft.process_packets(hot, packets, self.program,
+                                 top_n=self.cfg.top_n, keep=keep,
+                                 with_spills=with_spills)
+        if with_spills:
+            hot, outs, spills = out
+            return (hot, outs.new_flow.sum().astype(jnp.int32),
+                    outs.evicted.sum().astype(jnp.int32), spills)
+        hot, outs = out
+        return (hot, outs.new_flow.sum().astype(jnp.int32),
                 outs.evicted.sum().astype(jnp.int32))
 
-    def _lane_core(self, state: ft.TrackerState, packets: ft.PacketBatch,
+    def _track(self, state, packets: ft.PacketBatch,
+               keep: Optional[jax.Array] = None, *, fallback: str = "auto"):
+        """Step 2 only: merge one (optionally masked) microbatch into the
+        tracker under ``cfg.tracker``.  Returns ``(state, new_flows,
+        evicted, spilled, promoted)`` — the merge half of the lane contract,
+        dispatched on its own by the sharded pipeline's overflow rounds.
+        ``fallback`` is forwarded to the segmented tracker's collision
+        branch (vmapped callers hoist it).
+
+        In hot-only mode the state is a plain tracker bank, spills/promotes
+        are constant zero, and the traced merge is identical to the
+        single-level pipeline.  With ``cold_size > 0`` the two-level step
+        semantics documented in :mod:`repro.core.cold_store` run around the
+        same merge: promote -> merge (with spill records) -> spill -> scrub."""
+        zero = jnp.int32(0)
+        if not self.cfg.cold_size:
+            state, new, ev = self._merge(state, packets, keep,
+                                         fallback=fallback)
+            return state, new, ev, zero, zero
+        hot, cold = state.hot, state.cold
+        hot, cold, promoted = cold_store.promote_pass(
+            hot, cold, packets, keep, policy=self.cfg.cold_policy)
+        hot, new, ev, spills = self._merge(hot, packets, keep,
+                                           fallback=fallback,
+                                           with_spills=True)
+        cold, spilled = cold_store.apply_spills(
+            cold, spills, policy=self.cfg.cold_policy)
+        cold = cold_store.scrub_live(cold, hot, packets, keep)
+        return (cold_store.TwoLevelState(hot, cold), new, ev, spilled,
+                promoted)
+
+    def _lane_core(self, state, packets: ft.PacketBatch,
                    keep: Optional[jax.Array] = None, *,
                    max_ready: Optional[int] = None, fallback: str = "auto"
-                   ) -> tuple[ft.TrackerState, PipelineStepOutput]:
+                   ) -> tuple[Any, PipelineStepOutput]:
         """Steps 2-5 for ONE lane, the shard-shaped step contract: merge the
         (optionally keep-masked) packets, drain up to ``max_ready`` ready
         flows (the global budget, or one lane's split of it), run both
         engines, decide.  The single-lane pipeline calls it with the full
         batch and budget; the sharded pipeline vmaps / shard_maps it across
-        hash-partitioned lanes."""
-        state, new_flows, evicted = self._track(state, packets, keep,
-                                                fallback=fallback)
-        state, drained = ft.drain_ready(
-            state, top_n=self.cfg.top_n,
+        hash-partitioned lanes.  Draining always happens on the hot bank —
+        cold flows re-enter the hot table through promotion before they can
+        emit."""
+        state, new_flows, evicted, spilled, promoted = self._track(
+            state, packets, keep, fallback=fallback)
+        hot = state.hot if self.cfg.cold_size else state
+        hot, drained = ft.drain_ready(
+            hot, top_n=self.cfg.top_n,
             max_ready=self.cfg.max_ready if max_ready is None else max_ready)
+        state = state._replace(hot=hot) if self.cfg.cold_size else hot
         pkt_logits = self.packet_engine.fn(self.packet_engine.params,
                                            packet_meta_features(packets))
         flow_x = self.flow_engine.prep(drained.series, drained.payload)
@@ -327,6 +394,8 @@ class OctopusPipeline:
             flow_cls=flow_cls,
             new_flows=new_flows,
             evicted=evicted,
+            spilled=spilled,
+            promoted=promoted,
         )
 
     def _step_core(self, state: ft.TrackerState,
@@ -435,7 +504,9 @@ class OctopusPipeline:
 
         self.stats.record_dispatch(dt, packets=n, flows=n_flows,
                                    new_flows=int(out.new_flows),
-                                   evicted=int(out.evicted))
+                                   evicted=int(out.evicted),
+                                   spilled=int(out.spilled),
+                                   promoted=int(out.promoted))
         return out
 
     # ---------------------------------------------------- bucketed (masked)
@@ -481,6 +552,8 @@ class OctopusPipeline:
         self.stats.record_dispatch(dt, packets=n, flows=n_flows,
                                    new_flows=int(out.new_flows),
                                    evicted=int(out.evicted),
+                                   spilled=int(out.spilled),
+                                   promoted=int(out.promoted),
                                    padded=bucket - n)
         return out
 
@@ -529,7 +602,9 @@ class OctopusPipeline:
         self.stats.record_dispatch(
             dt, packets=L * self.cfg.batch_size, steps=L, flows=n_flows,
             new_flows=int(np.asarray(out.new_flows).sum()),
-            evicted=int(np.asarray(out.evicted).sum()))
+            evicted=int(np.asarray(out.evicted).sum()),
+            spilled=int(np.asarray(out.spilled).sum()),
+            promoted=int(np.asarray(out.promoted).sum()))
         return out
 
     def run(self, traffic: Iterable[ft.PacketBatch],
@@ -595,6 +670,8 @@ class OctopusPipeline:
         head = (f"OctopusPipeline: batch={c.batch_size} max_ready={c.max_ready} "
                 f"flow_model={c.flow_model} table={c.table_size} top_n={c.top_n} "
                 f"tracker={c.tracker} scan_len={c.scan_len}")
+        if c.cold_size:
+            head += f" cold={c.cold_size}({c.cold_policy})"
         fmt = lambda p: ", ".join(f"{s.name}->{s.engine}" for s in p.steps)
         return "\n".join([
             head, plan.explain(),

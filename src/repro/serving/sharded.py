@@ -124,10 +124,13 @@ class ShardedOctopusPipeline(OctopusPipeline):
         self._merge_warmed = False
 
     # ----------------------------------------------------------- lane plumbing
-    def _fresh_state(self) -> ft.TrackerState:
+    def _fresh_state(self):
         """Stacked per-lane tracker banks (leading ``num_shards`` axis), each
         a full ``table_size`` table so slot numbering is shard-invariant.
-        Under shard_map the banks are pre-placed on the ``lanes`` axis so the
+        With ``cold_size > 0`` every lane also owns a private cold bank (the
+        tiling maps over the whole two-level pytree) — spills and promotes
+        stay lane-local, like every other piece of flow state.  Under
+        shard_map the banks are pre-placed on the ``lanes`` axis so the
         carried state never reshards."""
         one = super()._fresh_state()
         stacked = jax.tree_util.tree_map(
@@ -174,6 +177,8 @@ class ShardedOctopusPipeline(OctopusPipeline):
             flow_cls=flat(outs.flow_cls),
             new_flows=outs.new_flows.sum().astype(jnp.int32),
             evicted=outs.evicted.sum().astype(jnp.int32),
+            spilled=outs.spilled.sum().astype(jnp.int32),
+            promoted=outs.promoted.sum().astype(jnp.int32),
         )
 
     # ------------------------------------------------------------ traced cores
@@ -238,11 +243,11 @@ class ShardedOctopusPipeline(OctopusPipeline):
 
         def make_lane(fb):
             def lane(st, p, k):
-                st, new, ev = self._track(st, p, k, fallback=fb)
+                st, new, ev, sp, pr = self._track(st, p, k, fallback=fb)
                 acts = decisions.decide_binary(
                     self.packet_engine.fn(self.packet_engine.params,
                                           packet_meta_features(p)))
-                return st, new, ev, acts
+                return st, new, ev, sp, pr, acts
 
             return lane
 
@@ -271,12 +276,14 @@ class ShardedOctopusPipeline(OctopusPipeline):
         pkt_merged = np.zeros((n,), np.int32) if len(rounds) > 1 else None
 
         t0 = time.perf_counter()
-        total_new = total_ev = 0
+        total_new = total_ev = total_sp = total_pr = 0
         for sb in rounds[:-1]:
-            self.state, new, ev, acts = self._merge_fn(self.state, sb.shards,
-                                                       sb.keep)
+            (self.state, new, ev, sp, pr,
+             acts) = self._merge_fn(self.state, sb.shards, sb.keep)
             total_new += int(np.asarray(new).sum())
             total_ev += int(np.asarray(ev).sum())
+            total_sp += int(np.asarray(sp).sum())
+            total_pr += int(np.asarray(pr).sum())
             k = np.asarray(sb.keep)
             pkt_merged[np.asarray(sb.src)[k]] = np.asarray(acts)[k]
         last = rounds[-1]
@@ -292,7 +299,9 @@ class ShardedOctopusPipeline(OctopusPipeline):
             out = out._replace(
                 pkt_actions=jnp.asarray(pkt_merged),
                 new_flows=jnp.int32(total_new + int(out.new_flows)),
-                evicted=jnp.int32(total_ev + int(out.evicted)))
+                evicted=jnp.int32(total_ev + int(out.evicted)),
+                spilled=jnp.int32(total_sp + int(out.spilled)),
+                promoted=jnp.int32(total_pr + int(out.promoted)))
 
         n_flows = self._feedback(
             np.asarray(packets.tuple_hash), np.asarray(out.pkt_actions),
@@ -302,6 +311,7 @@ class ShardedOctopusPipeline(OctopusPipeline):
         self.stats.record_dispatch(
             dt, packets=n, dispatches=len(rounds), flows=n_flows,
             new_flows=int(out.new_flows), evicted=int(out.evicted),
+            spilled=int(out.spilled), promoted=int(out.promoted),
             padded=self._padded_rows(rounds))
         return out
 
@@ -339,6 +349,8 @@ class ShardedOctopusPipeline(OctopusPipeline):
             dt, packets=L * self.cfg.batch_size, steps=L, flows=n_flows,
             new_flows=int(np.asarray(out.new_flows).sum()),
             evicted=int(np.asarray(out.evicted).sum()),
+            spilled=int(np.asarray(out.spilled).sum()),
+            promoted=int(np.asarray(out.promoted).sum()),
             # parts holds one single-round partition PER STEP — padding is
             # per step, not one multi-round step's worth
             padded=sum(self._padded_rows([p]) for p in parts))
@@ -395,7 +407,8 @@ class ShardedOctopusPipeline(OctopusPipeline):
 
         self.stats.record_dispatch(
             dt, packets=n, flows=n_flows, new_flows=int(out.new_flows),
-            evicted=int(out.evicted),
+            evicted=int(out.evicted), spilled=int(out.spilled),
+            promoted=int(out.promoted),
             padded=self.num_shards * bucket - n)
         return out
 
@@ -466,6 +479,8 @@ class ShardedOctopusPipeline(OctopusPipeline):
                 f"max_ready={c.max_ready} flow_model={c.flow_model} "
                 f"table={c.table_size}x{self.num_shards} top_n={c.top_n} "
                 f"tracker={c.tracker} scan_len={c.scan_len}")
+        if c.cold_size:
+            head += f" cold={c.cold_size}x{self.num_shards}({c.cold_policy})"
         lines = [head, plan.explain()]
         for i in range(self.num_shards):
             sub = plan.scoped(f"lane{i}", strip=True)

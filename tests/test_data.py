@@ -121,3 +121,65 @@ def test_packet_trace_collision_free():
     _, _, hashes, _ = synth_packet_trace(cfg)
     slots = np.asarray(hash_slot(jnp.asarray(hashes), 1024))
     assert len(set(slots.tolist())) == 64
+
+
+def test_traffic_collision_free_needs_room():
+    # populations beyond the table need collision_free=False (two-level store)
+    with pytest.raises(ValueError, match="collision_free"):
+        TrafficGenerator(TrafficConfig(active_flows=65, table_size=64))
+    gen = TrafficGenerator(TrafficConfig(active_flows=65, table_size=64,
+                                         collision_free=False))
+    assert len(gen._flows) == 65
+
+
+def test_traffic_clock_overflow_raises():
+    gen = TrafficGenerator(TrafficConfig(batch_size=4, active_flows=2,
+                                         table_size=64, seed=0))
+    gen.clock = 2**31 - 1  # int32 ts ceiling: the next tick must overflow
+    with pytest.raises(RuntimeError, match="restart the generator"):
+        gen.next_batch()
+
+
+class _ScriptedRNG:
+    """Wraps a Generator, forcing the first `integers` draws to a script."""
+
+    def __init__(self, inner, script):
+        self.inner, self.script = inner, list(script)
+
+    def integers(self, *a, **k):
+        if self.script:
+            return self.script.pop(0)
+        return self.inner.integers(*a, **k)
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+
+def test_spawn_flow_rejects_duplicate_live_hash():
+    """Regression: two live flows must never share a tuple hash, in ANY mode
+    (collision_free only guarded slots) — the tracker would silently merge
+    them while labels/counters see two flows."""
+    gen = TrafficGenerator(TrafficConfig(batch_size=4, active_flows=2,
+                                         table_size=64, seed=0,
+                                         collision_free=False))
+    live = next(iter(gen._live_hashes))
+    gen.rng = _ScriptedRNG(gen.rng, [live, live, live + 1])
+    f = gen._spawn_flow()
+    assert f.tuple_hash == live + 1  # the two scripted duplicates rejected
+    assert len(gen._live_hashes) == 3
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_live_hashes_unique_under_churn(seed):
+    """Property: across heavy retire/respawn churn the live population keeps
+    pairwise-distinct tuple hashes and the dedupe set mirrors it exactly."""
+    gen = TrafficGenerator(TrafficConfig(
+        batch_size=32, active_flows=24, table_size=32, seed=seed,
+        collision_free=False, elephant_fraction=0.2))
+    for _ in range(20):
+        gen.next_batch()
+        hashes = [f.tuple_hash for f in gen._flows]
+        assert len(set(hashes)) == len(hashes)
+        assert set(hashes) == gen._live_hashes
+        assert {f.slot for f in gen._flows} <= set(range(32))

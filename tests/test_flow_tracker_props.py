@@ -169,6 +169,85 @@ def test_drain_ready_validates_max_ready():
         ft.drain_ready(state, top_n=2, max_ready=9)
 
 
+def _hash_for_slot(slot: int, table_size: int) -> int:
+    return next(h for h in range(1, 10**7)
+                if ft.hash_slot_scalar(h, table_size) == slot)
+
+
+def _fill_ready(table_size: int, top_n: int, n_slots: int) -> ft.TrackerState:
+    """A table whose first ``n_slots`` slots each hold a ready flow, built
+    through the real packet path (not hand-poked leaves)."""
+    program = default_program()
+    state = ft.init_state(table_size, top_n, top_k=2, pay_bytes=4)
+    hashes = [_hash_for_slot(s, table_size) for s in range(n_slots)]
+    for rep in range(top_n):
+        batch = ft.PacketBatch(
+            ts=jnp.asarray([10 * rep + s for s in range(n_slots)], jnp.int32),
+            size=jnp.full((n_slots,), 100, jnp.int32),
+            dir=jnp.zeros((n_slots,), jnp.int32),
+            flags=jnp.zeros((n_slots,), jnp.int32),
+            proto=jnp.zeros((n_slots,), jnp.int32),
+            tuple_hash=jnp.asarray(hashes, jnp.int32),
+            payload=jnp.zeros((n_slots, 4), jnp.int32))
+        state, _ = ft.process_packets(state, batch, program, top_n=top_n)
+    return state
+
+
+def test_drain_ready_all_slots_with_full_budget():
+    """Boundary: every slot ready and ``max_ready == table_size`` — one call
+    empties the whole table and leaves it bit-identical to a fresh init."""
+    table, top_n = 8, 2
+    state = _fill_ready(table, top_n, n_slots=table)
+    state, d = ft.drain_ready(state, top_n=top_n, max_ready=table)
+    assert np.asarray(d.mask).all()
+    assert np.asarray(d.slots).tolist() == list(range(table))
+    for a, b in zip(state, ft.init_state(table, top_n, 2, 4)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # drained dry: a second full-budget call emits nothing, all padding rows
+    state, d2 = ft.drain_ready(state, top_n=top_n, max_ready=table)
+    assert not np.asarray(d2.mask).any()
+    assert np.asarray(d2.slots).tolist() == [table] * table
+
+
+def test_drain_ready_budget_exceeds_ready_count():
+    """Boundary: ``max_ready`` larger than the number of ready flows — the
+    extra rows are sentinel padding and untouched slots stay live."""
+    table, top_n = 8, 2
+    state = _fill_ready(table, top_n, n_slots=3)
+    state, d = ft.drain_ready(state, top_n=top_n, max_ready=table)
+    assert np.asarray(d.mask).tolist() == [True] * 3 + [False] * 5
+    assert np.asarray(d.slots).tolist()[:3] == [0, 1, 2]
+    assert np.asarray(d.slots).tolist()[3:] == [table] * 5
+    assert int(np.asarray(state.count).sum()) == 0
+
+
+def test_release_flows_recycles_every_leaf():
+    """Regression (two-level prerequisite): release must reset ALL seven
+    leaves — a recycled slot that keeps stale series/sizes/payload/features
+    poisons the next flow established there."""
+    table, top_n = 8, 3
+    state = _fill_ready(table, top_n, n_slots=4)
+    state = ft.release_flows(state, jnp.arange(4, dtype=jnp.int32))
+    fresh = ft.init_state(table, top_n, 2, 4)
+    for name, a, b in zip(state._fields, state, fresh):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"leaf {name} not recycled")
+
+
+def test_release_flows_sentinel_slot_is_noop():
+    """Regression: the padding sentinel ``table_size`` must drop, not clamp.
+    Clamping silently wipes the LAST slot whenever a drain emits fewer than
+    ``max_ready`` flows (padding rows carry the sentinel)."""
+    table, top_n = 8, 2
+    state = _fill_ready(table, top_n, n_slots=table)  # slot 7 live
+    before = state
+    state = ft.release_flows(
+        state, jnp.full((3,), table, jnp.int32))  # all-padding release
+    for name, a, b in zip(state._fields, state, before):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"sentinel clobbered {name}")
+
+
 # ------------------------------------------------------- hypothesis (CI)
 
 @settings(max_examples=10, deadline=None)

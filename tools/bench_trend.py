@@ -27,13 +27,15 @@ import time
 
 SCHEMA_VERSION = 1
 
-# Gated rows: the single-lane/sharded segmented pipeline curve and the
-# 4-client service row — the repo's headline pkt/s numbers.
+# Gated rows: the single-lane/sharded segmented pipeline curve, the
+# 4-client service row, and the hierarchical (hot+cold, ~1.3e5-flow
+# capacity) flow-table row — the repo's headline pkt/s numbers.
 TRACKED = (
     "pipeline_cnn_lane128_segmented_s1",
     "pipeline_cnn_lane128_segmented_s2",
     "pipeline_cnn_lane128_segmented_s4",
     "service_cnn_c4_b16",
+    "pipeline_cnn_b128_cold131072",
 )
 
 _POINT_RE = re.compile(r"^BENCH_(\d+)\.json$")
