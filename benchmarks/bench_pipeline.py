@@ -93,6 +93,75 @@ def _shard_grid(smoke: bool):
     return [(per_lane, s, cap if s > 1 else None, 1024) for s in shards]
 
 
+def _scenario_rows(steps: int):
+    """One row per scenario (fixed shapes in smoke and full runs, so the
+    topk row can sit in the bench-trend TRACKED set)."""
+    from repro.core import decisions
+    from repro.data.traffic import TrafficConfig, TrafficGenerator
+    from repro.scenarios import (
+        AdversarialScenario,
+        DDoSScenario,
+        HeavyHitterScenario,
+        adversarial_config,
+    )
+    from repro.serving import OctopusPipeline, PipelineConfig
+    import jax
+    from repro.models import paper_models
+
+    # heavy-hitter: two-level table, population ~2x the hot bank, top-k over
+    # hot + cold residents every step
+    sc = HeavyHitterScenario(k=8, batch_size=128, max_ready=16,
+                             table_size=1024, cold_size=4096, top_n=8,
+                             top_k=1, pay_bytes=4)
+    gen = TrafficGenerator(TrafficConfig(
+        batch_size=128, active_flows=2048, table_size=1024,
+        collision_free=False, elephant_fraction=0.3, pay_bytes=4, seed=0))
+    sc.pipe.warmup()
+    sc.run(gen, steps)
+    s = sc.pipe.stats
+    yield row(
+        "scenario_topk_b128_cold4096", s.step_us,
+        f"pkt_per_s={s.pkt_per_s:.0f};flow_per_s={s.flow_per_s:.1f};"
+        f"steps={s.steps};spilled={s.spilled};promoted={s.promoted};"
+        f"k=8;trace_count={sc.pipe.trace_count}")
+
+    # DDoS: anomaly head + host-side hysteresis controller feedback
+    sc = DDoSScenario(deny_on=0.6, deny_off=0.4, batch_size=64,
+                      table_size=1024)
+    gen = TrafficGenerator(TrafficConfig(
+        batch_size=64, active_flows=16, table_size=1024,
+        elephant_fraction=1.0, elephant_pkts=(30, 60), seed=0))
+    sc.pipe.warmup()
+    sc.run(gen, steps)
+    s = sc.pipe.stats
+    yield row(
+        "scenario_ddos_b64_cnn", s.step_us,
+        f"pkt_per_s={s.pkt_per_s:.0f};flow_per_s={s.flow_per_s:.1f};"
+        f"steps={s.steps};emissions={len(sc.emissions)};"
+        f"denied={len(sc.denied)};churn={sc.churn};"
+        f"trace_count={sc.pipe.trace_count}")
+
+    # collision attack against the tracker path (feature-only heads, so the
+    # row isolates the eviction churn instead of engine inference)
+    cfg = PipelineConfig(batch_size=64, max_ready=8, table_size=256,
+                         top_n=8, top_k=1, pay_bytes=4,
+                         pkt_head=decisions.PassHead(),
+                         flow_head=decisions.TopKHead())
+    pipe = OctopusPipeline(
+        paper_models.init_paper_model("mlp", jax.random.PRNGKey(0)),
+        paper_models.init_paper_model("cnn", jax.random.PRNGKey(1)), cfg)
+    sc = AdversarialScenario(pipe, adversarial_config(
+        "collision_attack", batch_size=64, table_size=256, adv_slots=4,
+        active_flows=32, pay_bytes=4, seed=0))
+    pipe.warmup()
+    s = sc.run(steps)
+    yield row(
+        "scenario_adv_collision_b64", s.step_us,
+        f"pkt_per_s={s.pkt_per_s:.0f};flow_per_s={s.flow_per_s:.1f};"
+        f"steps={s.steps};evicted={s.evicted};new_flows={s.new_flows};"
+        f"trace_count={pipe.trace_count}")
+
+
 def run(steps: int = 48, smoke: bool = False):
     """Yield CSV rows (name,us_per_call,derived) across (tracker, scan_len,
     num_shards).
@@ -151,6 +220,12 @@ def run(steps: int = 48, smoke: bool = False):
             f"steps={s.steps};capacity={hot + cold};flows={s.flows};"
             f"evicted={s.evicted};spilled={s.spilled};promoted={s.promoted};"
             f"trace_count={pipe.trace_count}")
+
+    # ---- scenario rows: the pluggable-head use cases (repro.scenarios).
+    # heavy-hitter runs feature-only heads (no engine dispatch at all), DDoS
+    # runs the anomaly head + hysteresis feedback, and the collision row
+    # measures what a hash-collision attack costs the tracker path.
+    yield from _scenario_rows(min(steps, 12) if smoke else min(steps, 24))
 
     shard_steps = min(steps, 24) if smoke else min(steps, 32)
     for per_lane, num_shards, lane_batch, table_size in _shard_grid(smoke):

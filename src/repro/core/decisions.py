@@ -1,13 +1,39 @@
 """Control domain / RV-core analogue (paper §3.4): turn DL inference outputs
-into data-plane rule-table updates (paper working-procedure steps 5-6)."""
+into data-plane rule-table updates (paper working-procedure steps 5-6).
+
+The decide step (step 5) is an extension point: a :class:`DecisionHead` maps
+what the pipeline computed for one microbatch — the engines' logits and/or
+the tracker's drained flow records — to data-plane actions.  Heads declare
+``needs_logits``; a head with ``needs_logits == False`` is *feature-only*:
+the pipeline skips that engine's inference entirely (the paper's
+heavy-hitter-style telemetry use-cases, which never touch the DL domain).
+
+Two head families share the protocol:
+
+  * **packet heads** — ``decide(logits, packets) -> (P,) int32 actions``
+    per ingested packet (:class:`BinaryHead`, the original use-case-1
+    intrusion decision, and :class:`PassHead`, feature-only allow-all).
+  * **flow heads** — ``decide(logits, drained) -> (actions, cls, scores)``
+    per drained ready flow, all ``(R,)`` (:class:`ClassHead`, the original
+    use-case-2/3 classification; :class:`AnomalyHead`, DDoS-style anomaly
+    scoring thresholded into deny; :class:`TopKHead`, feature-only byte
+    counters for heavy-hitter ranking).  ``scores`` is the head's float32
+    per-flow score (softmax confidence / anomaly score / byte count) —
+    surfaced as ``PipelineStepOutput.flow_scores`` for host-side scenario
+    controllers (hysteresis, top-k reporting).
+
+Heads are frozen dataclasses: hashable config values, safe inside the
+(frozen) ``PipelineConfig`` jit cache key."""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.kernels.flow_features.ops import HIST
 
 ACTIONS = ("allow", "deny", "mark")
 
@@ -48,3 +74,124 @@ def decide_class(logits: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Classification decision (use-cases 2/3): -> (action=mark, class id)."""
     cls = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     return jnp.full_like(cls, ACTIONS.index("mark")), cls
+
+
+# ---------------------------------------------------------------------------
+# Decision heads — the pluggable step-5 protocol
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class DecisionHead(Protocol):
+    """What every head declares: a stable ``name`` (reports/registries) and
+    whether the pipeline must run the corresponding engine's inference to
+    feed it (``needs_logits``).  Feature-only heads receive ``logits=None``."""
+
+    name: str
+    needs_logits: bool
+
+
+@dataclass(frozen=True)
+class BinaryHead:
+    """Packet head, use-case 1: softmax the packet engine's 2-way logits and
+    deny when the attack-class probability strictly exceeds the threshold
+    (``p == deny_threshold`` stays allow — the boundary is regression-tested
+    to agree between the f32 and int8-emulate datapaths)."""
+
+    deny_threshold: float = 0.5
+    name: str = field(default="binary", init=False)
+    needs_logits: bool = field(default=True, init=False)
+
+    def decide(self, logits: jax.Array, packets) -> jax.Array:
+        return decide_binary(logits, self.deny_threshold)
+
+
+@dataclass(frozen=True)
+class PassHead:
+    """Feature-only packet head: allow every packet, never run the packet
+    engine (telemetry scenarios where the per-packet DL verdict is unused)."""
+
+    name: str = field(default="pass", init=False)
+    needs_logits: bool = field(default=False, init=False)
+
+    def decide(self, logits, packets) -> jax.Array:
+        return jnp.zeros(packets.ts.shape, jnp.int32)
+
+
+@dataclass(frozen=True)
+class ClassHead:
+    """Flow head, use-cases 2/3: argmax classification (action ``mark``),
+    score = the winning class's softmax confidence."""
+
+    name: str = field(default="class", init=False)
+    needs_logits: bool = field(default=True, init=False)
+
+    def decide(self, logits: jax.Array, drained
+               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        actions, cls = decide_class(logits)
+        p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        return actions, cls, jnp.max(p, axis=-1)
+
+
+@dataclass(frozen=True)
+class AnomalyHead:
+    """Flow head, DDoS/anomaly scoring: score = the malicious class's softmax
+    probability; ``score >= deny_threshold`` denies the flow, anything else
+    marks it with its argmax class.  The raw per-flow scores surface in
+    ``flow_scores`` so a host-side controller can add hysteresis (the
+    on-device threshold alone would thrash the rule table on flapping
+    flows — see ``repro.scenarios.ddos``)."""
+
+    deny_threshold: float = 0.5
+    malicious_class: int = 0
+    name: str = field(default="anomaly", init=False)
+    needs_logits: bool = field(default=True, init=False)
+
+    def decide(self, logits: jax.Array, drained
+               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        score = p[..., self.malicious_class]
+        cls = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        actions = jnp.where(score >= self.deny_threshold,
+                            jnp.int32(ACTIONS.index("deny")),
+                            jnp.int32(ACTIONS.index("mark")))
+        return actions, cls, score
+
+
+@dataclass(frozen=True)
+class TopKHead:
+    """Feature-only flow head, heavy-hitter telemetry: never run the flow
+    engine; score every drained flow by its accumulated byte counter (the
+    tracker's ``flow_size`` history lane), action ``mark``, class ``-1``
+    (no DL verdict).  Resident flows — the other half of the top-k set —
+    are read off the tracker state host-side (``repro.scenarios.heavy_hitter``)."""
+
+    name: str = field(default="topk", init=False)
+    needs_logits: bool = field(default=False, init=False)
+
+    def decide(self, logits, drained
+               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        score = drained.features[..., HIST["flow_size"]].astype(jnp.float32)
+        cls = jnp.full(drained.tuple_id.shape, -1, jnp.int32)
+        actions = jnp.full(drained.tuple_id.shape, ACTIONS.index("mark"),
+                           jnp.int32)
+        return actions, cls, score
+
+
+PKT_HEADS = {"binary": BinaryHead, "pass": PassHead}
+FLOW_HEADS = {"class": ClassHead, "anomaly": AnomalyHead, "topk": TopKHead}
+
+
+def packet_head(name: str, **params) -> DecisionHead:
+    """Registry constructor for packet heads (``PKT_HEADS``)."""
+    if name not in PKT_HEADS:
+        raise ValueError(f"packet head must be one of {tuple(PKT_HEADS)}, "
+                         f"got {name!r}")
+    return PKT_HEADS[name](**params)
+
+
+def flow_head(name: str, **params) -> DecisionHead:
+    """Registry constructor for flow heads (``FLOW_HEADS``)."""
+    if name not in FLOW_HEADS:
+        raise ValueError(f"flow head must be one of {tuple(FLOW_HEADS)}, "
+                         f"got {name!r}")
+    return FLOW_HEADS[name](**params)

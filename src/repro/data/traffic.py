@@ -126,6 +126,10 @@ def partition_batch(batch: PacketBatch, num_shards: int, *,
     return out
 
 
+ADVERSARIAL_MODES = ("none", "flash_crowd", "elephant_storm",
+                     "collision_attack")
+
+
 @dataclass(frozen=True)
 class TrafficConfig:
     batch_size: int = 32  # packets per emitted microbatch
@@ -142,6 +146,40 @@ class TrafficConfig:
     collision_free: bool = True  # no two *live* flows share a table slot
     seed: int = 0
     client_id: int = 0  # stamped on the generator for multi-stream serving
+    # --- adversarial modes (deterministic in `seed`, like everything else):
+    # "flash_crowd"       every adv_period-th batch is a crowd of batch_size
+    #                     fresh one-packet flows (SYN-flood shape: maximal
+    #                     flow-establishment churn, nothing ever goes ready)
+    # "elephant_storm"    every spawned flow is an elephant and every
+    #                     scheduled emission is a maximal burst_len burst
+    #                     (line-rate pressure on the ready/drain path)
+    # "collision_attack"  every spawned flow hashes into one of the first
+    #                     adv_slots tracker slots (worst-case eviction churn
+    #                     + the segmented tracker's in-batch collision
+    #                     fallback on every batch); with adv_shards > 0 the
+    #                     flows additionally all land in shard 0 of an
+    #                     adv_shards-lane partition, so same-slot flows share
+    #                     a shard and the sharded-exactness contract holds
+    #                     while lane 0 absorbs the whole attack
+    adversarial: str = "none"
+    adv_period: int = 4  # flash_crowd: crowd every adv_period-th batch
+    adv_slots: int = 2  # collision_attack: number of targeted hot slots
+    adv_shards: int = 0  # collision_attack: pin flows to shard 0 of N lanes
+
+    def __post_init__(self):
+        if self.adversarial not in ADVERSARIAL_MODES:
+            raise ValueError(f"adversarial must be one of {ADVERSARIAL_MODES}, "
+                             f"got {self.adversarial!r}")
+        if self.adv_period <= 0:
+            raise ValueError(f"adv_period must be positive, got {self.adv_period}")
+        if not 0 < self.adv_slots <= self.table_size:
+            raise ValueError(f"adv_slots must be in [1, table_size="
+                             f"{self.table_size}], got {self.adv_slots}")
+        if self.adv_shards < 0:
+            raise ValueError(f"adv_shards must be >= 0, got {self.adv_shards}")
+        if self.adversarial == "collision_attack" and self.collision_free:
+            raise ValueError("collision_attack concentrates live flows onto "
+                             "shared slots — set collision_free=False")
 
 
 class _Flow:
@@ -174,12 +212,19 @@ class TrafficGenerator:
             raise ValueError("batch_size and active_flows must be positive")
         if cfg.collision_free and cfg.active_flows > cfg.table_size:
             raise ValueError("collision_free needs active_flows <= table_size")
+        if (cfg.adversarial == "flash_crowd" and cfg.collision_free
+                and cfg.active_flows + cfg.batch_size > cfg.table_size):
+            raise ValueError(
+                "flash_crowd spawns batch_size extra live flows per crowd "
+                "batch — collision_free needs active_flows + batch_size <= "
+                "table_size")
         self.cfg = cfg
         self.client_id = cfg.client_id
         self.rng = np.random.default_rng(cfg.seed)
         self.clock = 0  # global microsecond clock (ts are non-decreasing)
         self.flows_started = 0
         self.flows_completed = 0
+        self.batches_emitted = 0
         self._live_slots: set[int] = set()
         self._live_hashes: set[int] = set()
         self._flows = [self._spawn_flow() for _ in range(cfg.active_flows)]
@@ -187,9 +232,20 @@ class TrafficGenerator:
     # ------------------------------------------------------------- population
     def _spawn_flow(self) -> _Flow:
         c = self.cfg
-        for _ in range(64 * max(c.table_size, 1)):
+        attack = c.adversarial == "collision_attack"
+        tries = 64 * max(c.table_size, 1) * (max(1, c.adv_shards) if attack
+                                             else 1)
+        for _ in range(tries):
             h = int(self.rng.integers(1, 2**31 - 1))
             slot = hash_slot_scalar(h, c.table_size)
+            if attack:
+                # concentrate the population: only hashes landing in the
+                # first adv_slots hot slots qualify, and (with adv_shards)
+                # only those partitioning into shard 0 — so colliding flows
+                # always share a shard, preserving sharded exactness
+                if slot >= c.adv_slots or (
+                        c.adv_shards and shard_of(h, c.adv_shards) != 0):
+                    continue
             # live tuple hashes must be unique in EVERY mode (two live flows
             # sharing a hash silently merge in the tracker while the
             # generator's flows_started / class labels count two); slot
@@ -202,7 +258,8 @@ class TrafficGenerator:
         self._live_slots.add(slot)
         self._live_hashes.add(h)
 
-        elephant = self.rng.random() < c.elephant_fraction
+        elephant = (True if c.adversarial == "elephant_storm"
+                    else self.rng.random() < c.elephant_fraction)
         lo, hi = c.elephant_pkts if elephant else c.mice_pkts
         cls = int(self.rng.integers(0, c.num_classes))
         malicious = self.rng.random() < c.malicious_fraction
@@ -222,8 +279,55 @@ class TrafficGenerator:
         self._flows[idx] = self._spawn_flow()
 
     # ------------------------------------------------------------------ batch
+    def _tick(self, mu: float) -> int:
+        """Advance the global clock by one ~exp(mu) inter-arrival and return
+        it, failing loud before int32 wrap (negative inter-arrival times
+        would silently corrupt min_intv/flow_dur in the tracker)."""
+        self.clock += max(1, int(self.rng.exponential(mu)))
+        if self.clock > _TS_MAX:
+            raise RuntimeError(
+                "traffic clock exceeded int32 microseconds "
+                f"({_TS_MAX}); restart the generator (fresh seed) for "
+                "longer soaks")
+        return self.clock
+
+    def _crowd_batch(self) -> PacketBatch:
+        """One flash-crowd microbatch: ``batch_size`` fresh one-packet flows
+        (unique live hashes, like every spawn), each retired immediately —
+        maximal establishment/recycle churn, no flow ever reaches top-n."""
+        c = self.cfg
+        n = c.batch_size
+        ts = np.zeros(n, np.int32)
+        size = np.zeros(n, np.int32)
+        dirs = np.zeros(n, np.int32)
+        flags = np.zeros(n, np.int32)
+        proto = np.zeros(n, np.int32)
+        thash = np.zeros(n, np.int32)
+        payload = np.zeros((n, c.pay_bytes), np.int32)
+        for i in range(n):
+            f = self._spawn_flow()
+            ts[i] = self._tick(2.0)  # near-line-rate arrival spacing
+            size[i] = int(np.clip(self.rng.normal(64, 8), 40, 1500))
+            flags[i] = 2  # SYN-like
+            proto[i] = f.proto
+            thash[i] = f.tuple_hash
+            payload[i] = self.rng.integers(0, 256, c.pay_bytes)
+            # one packet and gone: release the live slot/hash without
+            # touching the steady-state population in self._flows
+            self._live_slots.discard(f.slot)
+            self._live_hashes.discard(f.tuple_hash)
+            self.flows_completed += 1
+        return PacketBatch(
+            ts=jnp.asarray(ts), size=jnp.asarray(size), dir=jnp.asarray(dirs),
+            flags=jnp.asarray(flags), proto=jnp.asarray(proto),
+            tuple_hash=jnp.asarray(thash), payload=jnp.asarray(payload))
+
     def next_batch(self) -> PacketBatch:
         c = self.cfg
+        self.batches_emitted += 1
+        if (c.adversarial == "flash_crowd"
+                and self.batches_emitted % c.adv_period == 0):
+            return self._crowd_batch()
         n = c.batch_size
         ts = np.zeros(n, np.int32)
         size = np.zeros(n, np.int32)
@@ -237,19 +341,14 @@ class TrafficGenerator:
         while i < n:
             idx = int(self.rng.integers(0, len(self._flows)))
             f = self._flows[idx]
-            burst = 1
-            if self.rng.random() < c.burst_prob:
-                burst = int(self.rng.integers(2, c.burst_len + 1))
+            if c.adversarial == "elephant_storm":
+                burst = c.burst_len  # every emission is a maximal burst
+            else:
+                burst = 1
+                if self.rng.random() < c.burst_prob:
+                    burst = int(self.rng.integers(2, c.burst_len + 1))
             for _ in range(min(burst, f.remaining, n - i)):
-                self.clock += max(1, int(self.rng.exponential(f.mu_intv)))
-                if self.clock > _TS_MAX:
-                    # wrapping would feed the tracker negative inter-arrival
-                    # times and silently corrupt min_intv/flow_dur — fail loud
-                    raise RuntimeError(
-                        "traffic clock exceeded int32 microseconds "
-                        f"({_TS_MAX}); restart the generator (fresh seed) for "
-                        "longer soaks")
-                ts[i] = self.clock
+                ts[i] = self._tick(f.mu_intv)
                 size[i] = int(np.clip(self.rng.normal(f.mu_size, 40), 40, 1500))
                 f.last_dir ^= int(self.rng.random() < 0.4)  # occasional turn
                 dirs[i] = f.last_dir

@@ -1,0 +1,27 @@
+"""Use-case scenarios over the streaming pipelines (paper: the accelerator
+serves many in-network DL workloads, not one).  Each scenario composes the
+existing primitives — trackers, engines, rule table — through the pluggable
+:class:`~repro.core.decisions.DecisionHead` layer, and each ships with a
+differential or property-based harness in ``tests/test_scenarios.py``:
+
+  * :class:`HeavyHitterScenario` — top-k per-flow byte counters, feature-only
+    heads (no DL inference at all), exact against a dict-based oracle.
+  * :class:`DDoSScenario` — FlowEngine anomaly scores thresholded into deny
+    actions with host-side hysteresis feedback into the rule table.
+  * :class:`AdversarialScenario` — flash-crowd / elephant-storm /
+    hash-collision traffic (``TrafficConfig.adversarial``) driven through a
+    pipeline, conservation- and bit-exactness-tested.
+"""
+from repro.scenarios.adversarial import AdversarialScenario, adversarial_config
+from repro.scenarios.ddos import DDoSScenario, HysteresisController
+from repro.scenarios.heavy_hitter import (
+    HeavyHitterScenario,
+    flow_counters,
+    top_k_flows,
+)
+
+SCENARIOS = ("heavy_hitter", "ddos", "adversarial")
+
+__all__ = ["AdversarialScenario", "DDoSScenario", "HeavyHitterScenario",
+           "HysteresisController", "SCENARIOS", "adversarial_config",
+           "flow_counters", "top_k_flows"]

@@ -1,0 +1,81 @@
+"""Adversarial-traffic scenario: drive a pipeline with the
+``TrafficConfig.adversarial`` modes and measure what the attack costs.
+
+The traffic generator owns the attack shapes (``repro.data.traffic``):
+
+  * ``flash_crowd``      — every ``adv_period``-th batch is all fresh
+                           one-packet flows (maximal establishment churn).
+  * ``elephant_storm``   — every flow an elephant, every emission a maximal
+                           burst (ready/drain path under line-rate pressure).
+  * ``collision_attack`` — the whole population hashes into ``adv_slots``
+                           tracker slots (worst-case eviction churn; the
+                           segmented tracker's in-batch collision fallback
+                           runs every batch), optionally pinned to shard 0
+                           of ``adv_shards`` lanes so sharded exactness
+                           holds while one lane absorbs the attack.
+
+The harnesses in ``tests/test_scenarios.py`` assert the generator stays
+deterministic and conservation-correct under every mode, and that
+collision-attack batches remain bit-exact against the pure-Python oracle —
+the attack degrades throughput, never correctness.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Union
+
+from repro.data.traffic import (
+    ADVERSARIAL_MODES,
+    TrafficConfig,
+    TrafficGenerator,
+)
+
+ATTACKS = tuple(m for m in ADVERSARIAL_MODES if m != "none")
+
+
+def adversarial_config(mode: str, **overrides) -> TrafficConfig:
+    """A :class:`TrafficConfig` with per-mode defaults that actually stress
+    the mode's target path (override anything via kwargs):
+
+      * ``collision_attack`` needs ``collision_free=False`` and a population
+        larger than its slot budget;
+      * ``flash_crowd`` / ``elephant_storm`` default to small tables so the
+        churn is visible at test sizes."""
+    if mode not in ATTACKS:
+        raise ValueError(f"mode must be one of {ATTACKS}, got {mode!r}")
+    base = {
+        "flash_crowd": TrafficConfig(adversarial="flash_crowd",
+                                     active_flows=24, table_size=256,
+                                     collision_free=False),
+        "elephant_storm": TrafficConfig(adversarial="elephant_storm",
+                                        active_flows=16, table_size=256,
+                                        burst_len=8),
+        "collision_attack": TrafficConfig(adversarial="collision_attack",
+                                          active_flows=12, table_size=64,
+                                          adv_slots=2, collision_free=False),
+    }[mode]
+    return replace(base, **overrides)
+
+
+class AdversarialScenario:
+    """One pipeline + one adversarial generator, with a ``run`` that reports
+    the sustained stats (the bench rows drive this class)."""
+
+    def __init__(self, pipe, traffic: Union[TrafficConfig, TrafficGenerator]):
+        cfg = traffic.cfg if isinstance(traffic, TrafficGenerator) else traffic
+        if cfg.adversarial == "none":
+            raise ValueError("AdversarialScenario needs an adversarial "
+                             "TrafficConfig (adversarial != 'none')")
+        self.pipe = pipe
+        self.gen = (traffic if isinstance(traffic, TrafficGenerator)
+                    else TrafficGenerator(traffic))
+
+    @property
+    def mode(self) -> str:
+        return self.gen.cfg.adversarial
+
+    def run(self, steps: int):
+        """Drive ``steps`` microbatches through the pipeline; returns the
+        pipeline's sustained :class:`~repro.serving.pipeline.PipelineStats`
+        (eviction/new-flow counters show the attack's churn)."""
+        return self.pipe.run(self.gen, steps=steps)

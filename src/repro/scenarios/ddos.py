@@ -1,0 +1,171 @@
+"""DDoS / anomaly-scoring scenario: FlowEngine scores thresholded into deny
+actions that feed back into the switch-facing rule table, with host-side
+hysteresis so flapping flows don't thrash the table.
+
+On-device, the pipeline runs an :class:`~repro.core.decisions.AnomalyHead`:
+every drained flow gets a float32 anomaly score (the malicious class's
+softmax probability) surfaced as ``PipelineStepOutput.flow_scores``, and
+scores at or above ``deny_on`` emit an immediate deny action.
+
+Host-side, this controller adds the state the stateless head cannot keep:
+
+  * **hysteresis** — a flow enters the denied set at ``score >= deny_on``
+    but leaves it only at ``score <= deny_off`` (``deny_off < deny_on``).
+    Scores wandering inside the band cause no rule-table transitions; the
+    harness property-tests ``churn <= churn_raw`` against a shadow
+    bare-threshold controller run on the same emission stream.
+  * **re-assertion** — the pipeline's packet-granularity rule updates
+    overwrite a flow's action with the packet head's verdict every time the
+    flow sends another packet, so after each dispatch (step or ``scan_len``
+    chunk) the controller re-asserts ``deny`` for every denied flow.  That
+    bounds the window in which a denied flow's packets are not marked deny
+    in the table to one dispatch — at most ``scan_len`` microbatches, the
+    same lag the chunked feedback already has (property-tested).
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Any, Iterable, Optional
+
+import jax
+import numpy as np
+
+from repro.core import decisions
+from repro.models import paper_models
+from repro.serving import OctopusPipeline, PipelineConfig, ShardedOctopusPipeline
+
+_DENY = decisions.ACTIONS.index("deny")
+
+
+class HysteresisController:
+    """Host-side denied-set with a hysteresis band, plus a shadow
+    bare-threshold controller run on the same emission stream.
+
+    A flow enters ``denied`` at ``score >= deny_on`` and leaves only at
+    ``score <= deny_off`` (strict ``deny_off < deny_on``); every transition
+    is a rule-table write, counted in ``churn``.  The shadow flips on every
+    threshold crossing and counts ``churn_raw`` — with a strict band,
+    ``churn <= churn_raw`` always holds (property-tested)."""
+
+    def __init__(self, deny_on: float, deny_off: float):
+        if not 0.0 <= deny_off < deny_on <= 1.0:
+            raise ValueError(f"need 0 <= deny_off < deny_on <= 1, got "
+                             f"deny_off={deny_off} deny_on={deny_on}")
+        self.deny_on, self.deny_off = float(deny_on), float(deny_off)
+        self.denied: set[int] = set()  # hysteresis state
+        self._raw_denied: set[int] = set()  # shadow bare-threshold state
+        self.churn = 0  # denied-set transitions (what hits the rule table)
+        self.churn_raw = 0  # shadow transitions a bare threshold would make
+        self.emissions: list[tuple[int, float]] = []  # (fid, score) history
+
+    def observe(self, fid: int, score: float) -> None:
+        self.emissions.append((fid, score))
+        raw = score >= self.deny_on  # shadow: flips on every crossing
+        if raw != (fid in self._raw_denied):
+            self.churn_raw += 1
+            (self._raw_denied.add if raw else self._raw_denied.discard)(fid)
+        if fid in self.denied:
+            if score <= self.deny_off:  # release only below the band
+                self.denied.discard(fid)
+                self.churn += 1
+        elif score >= self.deny_on:
+            self.denied.add(fid)
+            self.churn += 1
+
+
+class DDoSScenario:
+    """Anomaly-score pipeline + hysteresis deny controller."""
+
+    def __init__(self, *, deny_on: float = 0.6, deny_off: float = 0.4,
+                 malicious_class: int = 0, num_shards: int = 0,
+                 lane_batch: Optional[int] = None, pkt_params: Any = None,
+                 flow_params: Any = None, config: Any = None, **cfg_kwargs):
+        if "flow_head" in cfg_kwargs:
+            raise ValueError("flow_head is fixed by the scenario "
+                             "(AnomalyHead; tune deny_on/malicious_class)")
+        self.ctl = HysteresisController(deny_on, deny_off)
+        self.cfg = PipelineConfig(flow_head=decisions.AnomalyHead(
+            deny_threshold=deny_on, malicious_class=malicious_class),
+            **cfg_kwargs)
+        if pkt_params is None:
+            pkt_params = paper_models.init_paper_model(
+                "mlp", jax.random.PRNGKey(0))
+        if flow_params is None:
+            flow_params = paper_models.init_paper_model(
+                self.cfg.flow_model, jax.random.PRNGKey(1))
+        if num_shards:
+            self.pipe = ShardedOctopusPipeline(
+                pkt_params, flow_params, self.cfg, num_shards=num_shards,
+                lane_batch=lane_batch, config=config)
+        else:
+            self.pipe = OctopusPipeline(pkt_params, flow_params, self.cfg,
+                                        config=config)
+
+    # ----------------------------------------------------- controller facade
+    @property
+    def denied(self) -> set[int]:
+        return self.ctl.denied
+
+    @property
+    def churn(self) -> int:
+        return self.ctl.churn
+
+    @property
+    def churn_raw(self) -> int:
+        return self.ctl.churn_raw
+
+    @property
+    def emissions(self) -> list[tuple[int, float]]:
+        return self.ctl.emissions
+
+    def _absorb(self, out) -> None:
+        """Fold one dispatch's emissions (single step or stacked chunk) into
+        the controller, in step order."""
+        mask = np.asarray(out.drained.mask)
+        fids = np.asarray(out.drained.tuple_id)
+        scores = np.asarray(out.flow_scores)
+        if mask.ndim == 1:
+            mask, fids, scores = mask[None], fids[None], scores[None]
+        for j in range(mask.shape[0]):
+            for fid, s in zip(fids[j][mask[j]].tolist(),
+                              scores[j][mask[j]].tolist()):
+                self.ctl.observe(int(fid), float(s))
+
+    def _reassert(self) -> None:
+        """Pin every denied flow's rule-table action back to deny (the
+        packet-granularity feedback just overwrote it with the packet head's
+        per-packet verdict)."""
+        if self.denied:
+            fids = np.fromiter(self.denied, np.int64, len(self.denied))
+            self.pipe.rules.update(
+                fids, np.full(len(fids), _DENY, np.int32))
+
+    # ------------------------------------------------------------- host loop
+    def step(self, batch):
+        out = self.pipe.step(batch)
+        self._absorb(out)
+        self._reassert()
+        return out
+
+    def run(self, traffic: Iterable, steps: int):
+        """Drive ``steps`` microbatches (chunked like ``OctopusPipeline.run``
+        when ``scan_len > 1``), absorbing scores and re-asserting denies
+        after every dispatch.  Returns the pipeline stats."""
+        it = iter(traffic)
+        L = self.cfg.scan_len
+        done = 0
+        while done < steps:
+            chunk = list(itertools.islice(it, min(L, steps - done)))
+            if not chunk:
+                break
+            if L > 1 and len(chunk) == L:
+                out = self.pipe.step_many(chunk)
+                self._absorb(out)
+                self._reassert()
+            else:
+                if L > 1:
+                    self.pipe._warm_step()
+                for b in chunk:
+                    self.step(b)
+            done += len(chunk)
+        return self.pipe.stats

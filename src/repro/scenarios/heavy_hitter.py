@@ -1,0 +1,125 @@
+"""Heavy-hitter / top-k detection: rank live flows by accumulated bytes using
+tracker state alone — the telemetry use-case family the paper serves without
+ever entering the DL domain.
+
+The pipeline runs with feature-only heads (:class:`~repro.core.decisions.PassHead`
+for packets, :class:`~repro.core.decisions.TopKHead` for flows), so neither
+engine dispatches any inference; the per-step cost is the tracker merge +
+drain.  The top-k set is computed host-side from the *resident* flow
+counters — every live flow in the hot bank(s) **and** every cold-store
+resident (a heavy hitter that lost its hot slot to a collision keeps its
+byte count in the cold table, so spill/promote never drops it from the
+ranking).  Drained (ready) flows leave the tracker, hence the ranking —
+exactly like the dict-based oracle the differential harness mirrors
+(``tests/test_scenarios.py``).
+"""
+from __future__ import annotations
+
+from typing import Any, Iterable, Optional
+
+import jax
+import numpy as np
+
+from repro.core import decisions
+from repro.kernels.flow_features.ops import HIST
+from repro.models import paper_models
+from repro.serving import OctopusPipeline, PipelineConfig, ShardedOctopusPipeline
+
+_FLOW_SIZE = HIST["flow_size"]  # the tracker's byte-counter history lane
+
+
+def _absorb(counters: dict[int, int], tuple_id, count, features) -> None:
+    """Fold one table's live rows into ``counters`` (lane axes flatten —
+    flows are lane-exclusive, so no key can collide across banks)."""
+    tid = np.asarray(tuple_id).reshape(-1)
+    cnt = np.asarray(count).reshape(-1)
+    feat = np.asarray(features)
+    feat = feat.reshape(-1, feat.shape[-1])
+    live = cnt > 0
+    for t, s in zip(tid[live].tolist(), feat[live, _FLOW_SIZE].tolist()):
+        counters[int(t)] = int(s)
+
+
+def flow_counters(state) -> dict[int, int]:
+    """``{tuple_hash: byte count}`` for every flow resident in ``state`` —
+    hot and cold levels, all lanes (works on a plain
+    :class:`~repro.core.flow_tracker.TrackerState`, a
+    :class:`~repro.core.cold_store.TwoLevelState`, and their sharded
+    lane-stacked forms).  The scrub-live invariant guarantees a tuple is
+    never live in hot and cold at once, so the dict is well-defined."""
+    counters: dict[int, int] = {}
+    if hasattr(state, "hot"):
+        _absorb(counters, state.hot.tuple_id, state.hot.count,
+                state.hot.features)
+        _absorb(counters, state.cold.tuple_id, state.cold.count,
+                state.cold.features)
+    else:
+        _absorb(counters, state.tuple_id, state.count, state.features)
+    return counters
+
+
+def top_k_flows(counters: dict[int, int], k: int) -> list[tuple[int, int]]:
+    """The ``k`` heaviest flows as ``[(tuple_hash, bytes), ...]``, heaviest
+    first.  Ties break on the smaller tuple hash — a total order, so two
+    rankings over equal counters are identical lists (what the differential
+    harness asserts, stronger than set equality)."""
+    return sorted(counters.items(), key=lambda kv: (-kv[1], kv[0]))[:k]
+
+
+class HeavyHitterScenario:
+    """Drive a pipeline with feature-only heads and report per-step top-k.
+
+    ``**cfg_kwargs`` go straight into :class:`PipelineConfig` (heads are
+    fixed to :class:`~repro.core.decisions.PassHead` /
+    :class:`~repro.core.decisions.TopKHead` here — that is the scenario);
+    because the flow head is feature-only, ``top_n`` is free of the DL
+    models' geometry — raise it so elephants stay resident longer, or keep
+    the default drain threshold.  ``num_shards > 0`` runs the sharded
+    pipeline (top-k then spans every lane's banks)."""
+
+    def __init__(self, *, k: int = 8, num_shards: int = 0,
+                 lane_batch: Optional[int] = None, pkt_params: Any = None,
+                 flow_params: Any = None, config: Any = None, **cfg_kwargs):
+        if k <= 0:
+            raise ValueError(f"k must be positive, got {k}")
+        for reserved in ("pkt_head", "flow_head"):
+            if reserved in cfg_kwargs:
+                raise ValueError(f"{reserved} is fixed by the scenario")
+        self.cfg = PipelineConfig(pkt_head=decisions.PassHead(),
+                                  flow_head=decisions.TopKHead(),
+                                  **cfg_kwargs)
+        self.k = k
+        if pkt_params is None:
+            pkt_params = paper_models.init_paper_model(
+                "mlp", jax.random.PRNGKey(0))
+        if flow_params is None:
+            flow_params = paper_models.init_paper_model(
+                self.cfg.flow_model, jax.random.PRNGKey(1))
+        if num_shards:
+            self.pipe = ShardedOctopusPipeline(
+                pkt_params, flow_params, self.cfg, num_shards=num_shards,
+                lane_batch=lane_batch, config=config)
+        else:
+            self.pipe = OctopusPipeline(pkt_params, flow_params, self.cfg,
+                                        config=config)
+
+    def step(self, batch):
+        return self.pipe.step(batch)
+
+    def counters(self) -> dict[int, int]:
+        """Resident per-flow byte counters (hot + cold, all lanes)."""
+        return flow_counters(self.pipe.state)
+
+    def top_k(self) -> list[tuple[int, int]]:
+        """Current top-k ``(tuple_hash, bytes)``, heaviest first."""
+        return top_k_flows(self.counters(), self.k)
+
+    def run(self, traffic: Iterable, steps: int) -> list[list[tuple[int, int]]]:
+        """Drive ``steps`` microbatches and return the per-step top-k
+        snapshots (pipeline stats accumulate on ``self.pipe.stats``)."""
+        it = iter(traffic)
+        snaps = []
+        for _ in range(steps):
+            self.pipe.step(next(it))
+            snaps.append(self.top_k())
+        return snaps

@@ -79,8 +79,24 @@ class PipelineConfig:
     scan_len: int = 1  # microbatches fused per dispatch (lax.scan length)
     cold_size: int = 0  # second-level (cold) flow table slots; 0 disables
     cold_policy: str = "age"  # cold eviction policy: "age" | "lru"
+    deny_threshold: float = 0.5  # default BinaryHead packet-deny threshold
+    pkt_head: Optional[Any] = None  # packet DecisionHead (None -> BinaryHead)
+    flow_head: Optional[Any] = None  # flow DecisionHead (None -> ClassHead)
 
     def __post_init__(self):
+        # resolve the default heads here (not in the pipeline) so the frozen
+        # config compares/hashes by the heads it will actually run with, and
+        # deny_threshold reaches the default head exactly once
+        if self.pkt_head is None:
+            object.__setattr__(self, "pkt_head",
+                               decisions.BinaryHead(self.deny_threshold))
+        if self.flow_head is None:
+            object.__setattr__(self, "flow_head", decisions.ClassHead())
+        for role, head in (("pkt_head", self.pkt_head),
+                           ("flow_head", self.flow_head)):
+            if not isinstance(head, decisions.DecisionHead):
+                raise ValueError(f"{role} must implement DecisionHead "
+                                 f"(name + needs_logits), got {head!r}")
         if self.flow_model not in FLOW_MODELS:
             raise ValueError(f"flow_model must be one of {FLOW_MODELS}, "
                              f"got {self.flow_model!r}")
@@ -99,7 +115,11 @@ class PipelineConfig:
                              f"{cold_store.COLD_POLICIES}, "
                              f"got {self.cold_policy!r}")
         # the flow engine consumes the tracker memories directly — their
-        # depths must match the model's fixed input geometry
+        # depths must match the model's fixed input geometry.  A feature-only
+        # flow head never runs the engine, so the tracker geometry is free
+        # (heavy-hitter configs shrink top_n to tune the drain threshold).
+        if not self.flow_head.needs_logits:
+            return
         if self.flow_model == "cnn" and self.top_n != paper_models.CNN_SEQ:
             raise ValueError(f"cnn flow model needs top_n == {paper_models.CNN_SEQ} "
                              f"(got {self.top_n})")
@@ -121,6 +141,7 @@ class PipelineStepOutput(NamedTuple):
     drained: ft.DrainResult  # max_ready rows + mask
     flow_actions: jax.Array  # (max_ready,) int32
     flow_cls: jax.Array  # (max_ready,) int32
+    flow_scores: jax.Array  # (max_ready,) float32 — the flow head's score
     new_flows: jax.Array  # () int32 — flows established this step
     evicted: jax.Array  # () int32 — stale flows recycled by collision
     spilled: jax.Array  # () int32 — evictions spilled into the cold store
@@ -382,21 +403,48 @@ class OctopusPipeline:
             hot, top_n=self.cfg.top_n,
             max_ready=self.cfg.max_ready if max_ready is None else max_ready)
         state = state._replace(hot=hot) if self.cfg.cold_size else hot
-        pkt_logits = self.packet_engine.fn(self.packet_engine.params,
-                                           packet_meta_features(packets))
-        flow_x = self.flow_engine.prep(drained.series, drained.payload)
-        flow_logits = self.flow_engine.fn(self.flow_engine.params, flow_x)
-        flow_actions, flow_cls = decisions.decide_class(flow_logits)
+        pkt_actions = self._decide_pkt(packets)
+        flow_actions, flow_cls, flow_scores = self._decide_flow(drained)
         return state, PipelineStepOutput(
-            pkt_actions=decisions.decide_binary(pkt_logits),
+            pkt_actions=pkt_actions,
             drained=drained,
             flow_actions=flow_actions,
             flow_cls=flow_cls,
+            flow_scores=flow_scores,
             new_flows=new_flows,
             evicted=evicted,
             spilled=spilled,
             promoted=promoted,
         )
+
+    # ------------------------------------------------------------ decide (5)
+    def _decide_pkt(self, packets: ft.PacketBatch) -> jax.Array:
+        """Step 4+5, packet side: run the packet engine only when the head
+        consumes logits (feature-only heads skip the inference entirely),
+        then let the head decide."""
+        head = self.cfg.pkt_head
+        logits = self.packet_engine.fn(
+            self.packet_engine.params,
+            packet_meta_features(packets)) if head.needs_logits else None
+        return head.decide(logits, packets)
+
+    def _decide_flow(self, drained: ft.DrainResult
+                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Step 4+5, flow side: prep + flow-engine inference only for
+        logits-consuming heads, then the head maps (logits, drained rows) to
+        (actions, classes, scores)."""
+        head = self.cfg.flow_head
+        if head.needs_logits:
+            flow_x = self.flow_engine.prep(drained.series, drained.payload)
+            logits = self.flow_engine.fn(self.flow_engine.params, flow_x)
+        else:
+            logits = None
+        return head.decide(logits, drained)
+
+    def _decide(self, packets: ft.PacketBatch, drained: ft.DrainResult
+                ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+        """Both decide halves at once — the full step-5 extension point."""
+        return (self._decide_pkt(packets),) + self._decide_flow(drained)
 
     def _step_core(self, state: ft.TrackerState,
                    packets: ft.PacketBatch) -> tuple[ft.TrackerState,
@@ -643,26 +691,35 @@ class OctopusPipeline:
 
     # ------------------------------------------------------------- placement
     def plan(self) -> RoutePlan:
-        """One RoutePlan over both engines' matmuls, in step order (packet
-        engine under the ``pkt/`` name scope, then the flow engine under
-        ``flow/``) — the single placement truth for the fused step.  The
-        shapes are per scan iteration: chunked dispatch scans the same step
-        body, so the placement is identical for every ``scan_len``."""
-        def both(px: jax.Array, fx_: jax.Array):
-            with name_scope("pkt"):
-                a = self.packet_engine.fn(self.packet_engine.params, px)
-            with name_scope("flow"):
-                b = self.flow_engine.fn(self.flow_engine.params, fx_)
-            return a, b
+        """One RoutePlan over the matmuls the decision heads actually
+        consume, in step order (packet engine under the ``pkt/`` name scope,
+        then the flow engine under ``flow/``) — the single placement truth
+        for the fused step.  Feature-only heads contribute no matmuls: the
+        plan reflects the inference the step really dispatches.  The shapes
+        are per scan iteration: chunked dispatch scans the same step body,
+        so the placement is identical for every ``scan_len``."""
+        use_pkt = self.cfg.pkt_head.needs_logits
+        use_flow = self.cfg.flow_head.needs_logits
+
+        def engines(px: jax.Array, fx_: jax.Array):
+            out = []
+            if use_pkt:
+                with name_scope("pkt"):
+                    out.append(self.packet_engine.fn(self.packet_engine.params, px))
+            if use_flow:
+                with name_scope("flow"):
+                    out.append(self.flow_engine.fn(self.flow_engine.params, fx_))
+            return tuple(out)
 
         return RoutePlan.trace(
-            both, self.packet_engine.abstract_input(self.cfg.batch_size),
+            engines, self.packet_engine.abstract_input(self.cfg.batch_size),
             self.flow_engine.abstract_input(self.cfg.max_ready),
             config=self.runtime)
 
     def explain(self) -> str:
         """Placement report for the fused step: the combined plan plus the
-        per-engine split."""
+        per-engine split (feature-only heads report their engine as
+        skipped)."""
         plan = self.plan()
         pkt = plan.scoped("pkt", strip=True)
         flow = plan.scoped("flow", strip=True)
@@ -672,9 +729,12 @@ class OctopusPipeline:
                 f"tracker={c.tracker} scan_len={c.scan_len}")
         if c.cold_size:
             head += f" cold={c.cold_size}({c.cold_policy})"
+        head += f" heads={c.pkt_head.name}/{c.flow_head.name}"
         fmt = lambda p: ", ".join(f"{s.name}->{s.engine}" for s in p.steps)
+        eng = lambda p, on: (f"({len(p)} matmuls): {fmt(p)}" if on
+                             else "skipped (feature-only head)")
         return "\n".join([
             head, plan.explain(),
-            f"  packet-engine ({len(pkt)} matmuls): {fmt(pkt)}",
-            f"  flow-engine ({len(flow)} matmuls): {fmt(flow)}",
+            f"  packet-engine {eng(pkt, c.pkt_head.needs_logits)}",
+            f"  flow-engine {eng(flow, c.flow_head.needs_logits)}",
         ])

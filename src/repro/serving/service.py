@@ -91,7 +91,9 @@ class ServeResult:
     """One served request: per-packet verdicts in the request's own order."""
 
     client_id: int
-    pkt_actions: np.ndarray  # (n,) int32 0 allow / 1 deny
+    # (n,) int32 packet-head verdicts (default binary head: 0 allow / 1 deny;
+    # pluggable heads — PipelineConfig.pkt_head — define their own codes)
+    pkt_actions: np.ndarray
     bucket: int  # the pre-warmed entry point that served it (largest chunk's)
     queue_wait_s: float  # enqueue -> dispatch start
     e2e_s: float  # enqueue -> verdicts ready

@@ -56,10 +56,8 @@ import numpy as np
 from jax import lax
 from jax.experimental.shard_map import shard_map
 
-from repro.core import decisions
 from repro.core import feature_extractor as fx
 from repro.core import flow_tracker as ft
-from repro.core.feature_extractor import packet_meta_features
 from repro.data.traffic import ShardedBatch, partition_batch, shard_of
 from repro.distributed import sharding as shd
 from repro.launch.mesh import make_lanes_mesh
@@ -175,6 +173,7 @@ class ShardedOctopusPipeline(OctopusPipeline):
             drained=jax.tree_util.tree_map(flat, outs.drained),
             flow_actions=flat(outs.flow_actions),
             flow_cls=flat(outs.flow_cls),
+            flow_scores=flat(outs.flow_scores),
             new_flows=outs.new_flows.sum().astype(jnp.int32),
             evicted=outs.evicted.sum().astype(jnp.int32),
             spilled=outs.spilled.sum().astype(jnp.int32),
@@ -244,10 +243,7 @@ class ShardedOctopusPipeline(OctopusPipeline):
         def make_lane(fb):
             def lane(st, p, k):
                 st, new, ev, sp, pr = self._track(st, p, k, fallback=fb)
-                acts = decisions.decide_binary(
-                    self.packet_engine.fn(self.packet_engine.params,
-                                          packet_meta_features(p)))
-                return st, new, ev, sp, pr, acts
+                return st, new, ev, sp, pr, self._decide_pkt(p)
 
             return lane
 
@@ -452,15 +448,21 @@ class ShardedOctopusPipeline(OctopusPipeline):
         its own ``lane<i>/`` scope (``plan().scoped("lane0")`` extracts one
         lane).  Shapes are per lane: the packet engine sees the lane capacity
         ``lane_batch``, the flow engine the lane drain budget."""
+        use_pkt = self.cfg.pkt_head.needs_logits
+        use_flow = self.cfg.flow_head.needs_logits
+
         def all_lanes(px: jax.Array, fx_: jax.Array):
             out = []
             for i in range(self.num_shards):
                 with lane_scope(i):
-                    with name_scope("pkt"):
-                        a = self.packet_engine.fn(self.packet_engine.params, px)
-                    with name_scope("flow"):
-                        b = self.flow_engine.fn(self.flow_engine.params, fx_)
-                out.append((a, b))
+                    if use_pkt:
+                        with name_scope("pkt"):
+                            out.append(self.packet_engine.fn(
+                                self.packet_engine.params, px))
+                    if use_flow:
+                        with name_scope("flow"):
+                            out.append(self.flow_engine.fn(
+                                self.flow_engine.params, fx_))
             return out
 
         return RoutePlan.trace(
@@ -481,6 +483,7 @@ class ShardedOctopusPipeline(OctopusPipeline):
                 f"tracker={c.tracker} scan_len={c.scan_len}")
         if c.cold_size:
             head += f" cold={c.cold_size}x{self.num_shards}({c.cold_policy})"
+        head += f" heads={c.pkt_head.name}/{c.flow_head.name}"
         lines = [head, plan.explain()]
         for i in range(self.num_shards):
             sub = plan.scoped(f"lane{i}", strip=True)

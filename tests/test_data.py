@@ -183,3 +183,85 @@ def test_live_hashes_unique_under_churn(seed):
         assert len(set(hashes)) == len(hashes)
         assert set(hashes) == gen._live_hashes
         assert {f.slot for f in gen._flows} <= set(range(32))
+
+
+# ------------------------------------------------- adversarial traffic modes
+
+def _adv_cfg(mode: str, *, client_id: int = 0, seed: int = 0) -> TrafficConfig:
+    shaped = {
+        "flash_crowd": dict(adv_period=2, collision_free=False),
+        "elephant_storm": dict(burst_len=4),
+        "collision_attack": dict(adv_slots=2, collision_free=False),
+    }[mode]
+    return TrafficConfig(batch_size=8, active_flows=8, table_size=64,
+                         adversarial=mode, client_id=client_id, seed=seed,
+                         **shaped)
+
+
+def test_adversarial_config_validation():
+    with pytest.raises(ValueError, match="adversarial must be one of"):
+        TrafficConfig(adversarial="slowloris")
+    with pytest.raises(ValueError, match="adv_period must be positive"):
+        TrafficConfig(adversarial="flash_crowd", adv_period=0)
+    with pytest.raises(ValueError, match="adv_slots must be in"):
+        TrafficConfig(adversarial="collision_attack", collision_free=False,
+                      adv_slots=0)
+    with pytest.raises(ValueError, match="adv_slots must be in"):
+        TrafficConfig(adversarial="collision_attack", collision_free=False,
+                      table_size=16, adv_slots=17)
+    with pytest.raises(ValueError, match="adv_shards must be >= 0"):
+        TrafficConfig(adversarial="collision_attack", collision_free=False,
+                      adv_shards=-1)
+    with pytest.raises(ValueError, match="collision_free=False"):
+        TrafficConfig(adversarial="collision_attack", collision_free=True)
+
+
+def test_flash_crowd_collision_free_needs_room():
+    with pytest.raises(ValueError, match="flash_crowd spawns"):
+        TrafficGenerator(TrafficConfig(
+            adversarial="flash_crowd", batch_size=32, active_flows=48,
+            table_size=64, collision_free=True))
+    # enough headroom: the crowd's extra live flows fit the table
+    TrafficGenerator(TrafficConfig(
+        adversarial="flash_crowd", batch_size=16, active_flows=32,
+        table_size=64, collision_free=True))
+
+
+def test_adversarial_merge_streams_seed_stable():
+    """A mixed-mode merged stream (one client per attack) is reproducible
+    batch for batch under the same merge seed."""
+    modes = ("flash_crowd", "elephant_storm", "collision_attack")
+
+    def stream(seed):
+        gens = [TrafficGenerator(_adv_cfg(m, client_id=i, seed=10 + i))
+                for i, m in enumerate(modes)]
+        return [(cid, _batch_key(b)) for cid, b in
+                merge_streams(*gens, seed=seed, steps=18, tagged=True)]
+
+    assert stream(5) == stream(5)
+    assert stream(5) != stream(6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**16),
+       steps=st.integers(min_value=1, max_value=12))
+def test_adversarial_merge_streams_conserve_per_client_order(seed, steps):
+    """Conservation extends to adversarial configs: each attacking client's
+    batches appear exactly once, in that client's own order, tagged with its
+    client_id."""
+    modes = ("flash_crowd", "elephant_storm", "collision_attack")
+    gens = [TrafficGenerator(_adv_cfg(m, client_id=i, seed=100 + i))
+            for i, m in enumerate(modes)]
+    merged = list(merge_streams(*gens, seed=seed, steps=steps, tagged=True))
+    assert len(merged) == steps
+
+    per_client: dict[int, list] = {}
+    for cid, batch in merged:
+        per_client.setdefault(cid, []).append(_batch_key(batch))
+    assert set(per_client) <= set(range(len(modes)))
+
+    for cid, got in per_client.items():
+        ref = TrafficGenerator(_adv_cfg(modes[cid], client_id=cid,
+                                        seed=100 + cid))
+        want = [_batch_key(b) for b in ref.batches(len(got))]
+        assert got == want

@@ -1,0 +1,289 @@
+"""Decision-layer unit & property tests (PR 9): RuleTable invariants
+(generation strictly monotone, packet-granularity updates never regress the
+flow class, stable lookup default, seeded churn vs a dict model), the
+DecisionHead registries and built-in heads, ``deny_threshold`` plumbing
+through :class:`PipelineConfig`, and the ``p == deny_threshold`` boundary —
+regression-tested to agree between the f32 and int8-emulate datapaths."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+from test_cold_store import make_batch
+
+from repro.core import flow_tracker as ft
+from repro.core.decisions import (
+    ACTIONS,
+    AnomalyHead,
+    BinaryHead,
+    ClassHead,
+    DecisionHead,
+    PassHead,
+    RuleTable,
+    TopKHead,
+    decide_binary,
+    decide_class,
+    flow_head,
+    packet_head,
+)
+from repro.kernels.flow_features.ops import HIST
+from repro.models import paper_models
+from repro.runtime import QuantScales, runtime_overrides
+from repro.runtime import quant
+from repro.serving import PipelineConfig
+
+_DENY = ACTIONS.index("deny")
+_MARK = ACTIONS.index("mark")
+
+
+# ---------------------------------------------------------------------------
+# RuleTable invariants
+# ---------------------------------------------------------------------------
+
+def test_generation_strictly_monotone():
+    t = RuleTable()
+    gens = [t.generation]
+    for k in range(5):
+        t.update(np.array([k % 2]), np.array([k % len(ACTIONS)]))
+        gens.append(t.generation)
+    assert gens == sorted(set(gens)), "every update must bump the generation"
+
+
+def test_packet_update_never_regresses_class():
+    t = RuleTable()
+    t.update(np.array([7]), np.array([_MARK]), classes=np.array([3]))
+    assert t.lookup(7)["class"] == 3
+    # packet-granularity update (no classes): action changes, class survives
+    t.update(np.array([7]), np.array([_DENY]))
+    assert t.lookup(7) == {"action": "deny", "class": 3, "generation": 2}
+    # a flow never classified stays at the unknown class
+    t.update(np.array([8]), np.array([_DENY]))
+    assert t.lookup(8)["class"] == -1
+
+
+def test_lookup_default_stable():
+    t = RuleTable()
+    default = t.lookup(12345)
+    assert default == {"action": "allow", "class": -1, "generation": 0}
+    # mutating the returned dict must not poison later lookups
+    default["action"] = "deny"
+    assert t.lookup(12345)["action"] == "allow"
+    # and a miss never materialises an entry
+    assert 12345 not in t.rules
+
+
+def _apply_model(model, fids, actions, classes, generation):
+    for i, fid in enumerate(fids):
+        cls = (classes[i] if classes is not None
+               else model.get(fid, {"class": -1})["class"])
+        model[fid] = {"action": ACTIONS[actions[i]], "class": cls,
+                      "generation": generation}
+
+
+def test_seeded_churn_matches_dict_model():
+    rng = np.random.default_rng(42)
+    t, model = RuleTable(), {}
+    for step in range(40):
+        n = int(rng.integers(1, 6))
+        fids = rng.integers(0, 12, n)
+        actions = rng.integers(0, len(ACTIONS), n)
+        classes = rng.integers(0, 8, n) if rng.random() < 0.5 else None
+        t.update(fids, actions, classes)
+        _apply_model(model, fids.tolist(), actions.tolist(),
+                     None if classes is None else classes.tolist(), step + 1)
+    assert t.generation == 40
+    for fid in range(12):
+        want = model.get(fid, {"action": "allow", "class": -1,
+                               "generation": 0})
+        assert t.lookup(fid) == want
+
+
+@settings(max_examples=50, deadline=None)
+@given(ops=st.lists(
+    st.tuples(st.integers(0, 7),  # fid
+              st.integers(0, len(ACTIONS) - 1),  # action
+              st.one_of(st.none(), st.integers(0, 9))),  # class (None = pkt)
+    max_size=60))
+def test_ruletable_properties(ops):
+    t, model = RuleTable(), {}
+    for fid, action, cls in ops:
+        gen_before = t.generation
+        t.update(np.array([fid]), np.array([action]),
+                 None if cls is None else np.array([cls]))
+        assert t.generation == gen_before + 1
+        _apply_model(model, [fid], [action],
+                     None if cls is None else [cls], t.generation)
+    for fid in range(8):
+        want = model.get(fid, {"action": "allow", "class": -1,
+                               "generation": 0})
+        assert t.lookup(fid) == want
+
+
+# ---------------------------------------------------------------------------
+# Head registries and built-in heads
+# ---------------------------------------------------------------------------
+
+def test_head_registries():
+    assert isinstance(packet_head("binary", deny_threshold=0.7), BinaryHead)
+    assert packet_head("binary", deny_threshold=0.7).deny_threshold == 0.7
+    assert isinstance(packet_head("pass"), PassHead)
+    assert isinstance(flow_head("class"), ClassHead)
+    assert isinstance(flow_head("anomaly", malicious_class=2), AnomalyHead)
+    assert isinstance(flow_head("topk"), TopKHead)
+    with pytest.raises(ValueError, match="packet head must be one of"):
+        packet_head("topk")
+    with pytest.raises(ValueError, match="flow head must be one of"):
+        flow_head("binary")
+
+
+def test_heads_satisfy_protocol_and_hash():
+    for head in (BinaryHead(), PassHead(), ClassHead(), AnomalyHead(),
+                 TopKHead()):
+        assert isinstance(head, DecisionHead)
+        hash(head)  # frozen: usable inside the jit-cache-key config
+    assert BinaryHead(0.7) == BinaryHead(0.7)
+    assert BinaryHead(0.7) != BinaryHead(0.5)
+    assert BinaryHead().needs_logits and ClassHead().needs_logits
+    assert not PassHead().needs_logits and not TopKHead().needs_logits
+
+
+def test_pass_head_allows_everything():
+    batch = make_batch([1, 2, 3], [10, 20, 30], pay_bytes=4)
+    out = np.asarray(PassHead().decide(None, batch))
+    np.testing.assert_array_equal(out, np.zeros(3, np.int32))
+
+
+def test_binary_head_matches_decide_binary():
+    logits = jnp.asarray([[0.0, 0.0], [0.0, 1.0], [1.0, 0.0]])
+    head = BinaryHead()
+    np.testing.assert_array_equal(np.asarray(head.decide(logits, None)),
+                                  np.asarray(decide_binary(logits, 0.5)))
+    # ties (p == 0.5) allow; a clear attack logit denies
+    np.testing.assert_array_equal(np.asarray(head.decide(logits, None)),
+                                  [0, 1, 0])
+
+
+def test_class_head_scores_are_confidences():
+    logits = jnp.asarray([[0.0, 2.0], [3.0, 0.0]])
+    actions, cls, scores = ClassHead().decide(logits, None)
+    want_a, want_c = decide_class(logits)
+    np.testing.assert_array_equal(np.asarray(actions), np.asarray(want_a))
+    np.testing.assert_array_equal(np.asarray(cls), np.asarray(want_c))
+    p = np.asarray(jax.nn.softmax(np.asarray(logits), axis=-1))
+    np.testing.assert_allclose(np.asarray(scores), p.max(axis=-1), rtol=1e-6)
+
+
+def test_anomaly_head_boundary_is_inclusive():
+    # tied logits -> malicious probability exactly 0.5; score >= thr denies
+    logits = jnp.asarray([[0.0, 0.0], [0.0, 4.0], [4.0, 0.0]])
+    actions, cls, scores = AnomalyHead(deny_threshold=0.5,
+                                       malicious_class=0).decide(logits, None)
+    np.testing.assert_array_equal(np.asarray(actions),
+                                  [_DENY, _MARK, _DENY])
+    assert float(scores[0]) == 0.5
+    np.testing.assert_array_equal(np.asarray(cls),
+                                  np.argmax(np.asarray(logits), axis=-1))
+
+
+def test_topk_head_scores_byte_counters():
+    feats = np.zeros((4, 16), np.int32)
+    feats[:, HIST["flow_size"]] = [100, 7, 0, 9000]
+    drained = ft.DrainResult(
+        slots=jnp.arange(4, dtype=jnp.int32),
+        mask=jnp.ones(4, bool),
+        tuple_id=jnp.asarray([11, 22, 33, 44], jnp.int32),
+        count=jnp.ones(4, jnp.int32),
+        features=jnp.asarray(feats),
+        series=jnp.zeros((4, 6), jnp.int32),
+        sizes=jnp.zeros((4, 6), jnp.int32),
+        payload=jnp.zeros((4, 4, 4), jnp.int32))
+    actions, cls, scores = TopKHead().decide(None, drained)
+    np.testing.assert_array_equal(np.asarray(scores), [100, 7, 0, 9000])
+    np.testing.assert_array_equal(np.asarray(cls), np.full(4, -1))
+    np.testing.assert_array_equal(np.asarray(actions), np.full(4, _MARK))
+
+
+# ---------------------------------------------------------------------------
+# deny_threshold plumbing and the f32/int8 boundary agreement
+# ---------------------------------------------------------------------------
+
+def test_deny_threshold_plumbs_into_default_head():
+    cfg = PipelineConfig(deny_threshold=0.7)
+    assert cfg.pkt_head == BinaryHead(deny_threshold=0.7)
+    assert cfg.flow_head == ClassHead()
+    # an explicit head wins over the scalar knob
+    cfg = PipelineConfig(deny_threshold=0.7, pkt_head=PassHead())
+    assert cfg.pkt_head == PassHead()
+
+
+def test_config_rejects_non_heads():
+    with pytest.raises(ValueError, match="pkt_head"):
+        PipelineConfig(pkt_head=object())
+    with pytest.raises(ValueError, match="flow_head"):
+        PipelineConfig(flow_head=object())
+
+
+def _tied_mlp_params(seed=3):
+    """Paper MLP whose final layer has identical allow/deny columns, so the
+    logits tie bit-for-bit and p lands exactly on 0.5 — the deny boundary."""
+    params = dict(paper_models.init_paper_model("mlp", jax.random.PRNGKey(seed)))
+    w3 = np.asarray(params["w3"]).copy()
+    b3 = np.asarray(params["b3"]).copy()
+    w3[:, 1] = w3[:, 0]
+    b3[1] = b3[0]
+    params["w3"] = jnp.asarray(w3)
+    params["b3"] = jnp.asarray(b3)
+    return params
+
+
+def _hidden_before_final(params, x):
+    h = np.asarray(x, np.float32)
+    for i in range(len(paper_models.MLP_DIMS) - 2):
+        h = np.maximum(h @ np.asarray(params[f"w{i}"])
+                       + np.asarray(params[f"b{i}"]), 0.0)
+    return h
+
+
+def test_deny_boundary_consistent_f32_and_int8_emulate():
+    """``p == deny_threshold`` must decide identically (allow — the
+    comparison is strict) in the f32 datapath and the int8-emulate datapath:
+    identical final-layer columns quantize identically, so the logit tie —
+    and hence the boundary verdict — survives quantization bit-for-bit."""
+    params = _tied_mlp_params()
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.uniform(-2, 2, (16, paper_models.MLP_DIMS[0]))
+                    .astype(np.float32))
+    head = BinaryHead(deny_threshold=0.5)
+
+    logits_f32 = paper_models.mlp_apply(params, x)
+    np.testing.assert_array_equal(np.asarray(logits_f32[:, 0]),
+                                  np.asarray(logits_f32[:, 1]))
+    p_f32 = np.asarray(jax.nn.softmax(np.asarray(logits_f32), axis=-1))
+    np.testing.assert_array_equal(p_f32[:, 1], np.full(16, 0.5))
+
+    # quantize the final layer (per-output-channel scales: tied columns get
+    # the same scale, so their int8 lanes stay identical)
+    h = _hidden_before_final(params, x)
+    w3 = np.asarray(params["w3"])
+    sx = quant.pick_scale(float(np.abs(h).max()))
+    sw = tuple(quant.pick_scale(float(v)) for v in np.abs(w3).max(axis=0))
+    assert sw[0] == sw[1]
+    scales = QuantScales(entries=(("w3", sx, sw),))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")  # w0..w2 miss the table: f32 fallback
+        with runtime_overrides(quantize=True, quant_scales=scales,
+                               quant_impl="emulate"):
+            logits_q = paper_models.mlp_apply(params, x)
+    np.testing.assert_array_equal(np.asarray(logits_q[:, 0]),
+                                  np.asarray(logits_q[:, 1]))
+
+    for logits in (logits_f32, logits_q):
+        got = np.asarray(head.decide(jnp.asarray(logits), None))
+        np.testing.assert_array_equal(got, np.zeros(16, np.int32),
+                                      err_msg="p == deny_threshold must allow")
+    # and the boundary is genuinely strict: nudging one deny logit up flips it
+    bumped = np.asarray(logits_f32).copy()
+    bumped[:, 1] += 0.1
+    assert np.all(np.asarray(head.decide(jnp.asarray(bumped), None)) == 1)

@@ -357,3 +357,28 @@ async def test_queue_depth_returns_to_zero_after_drain(mlp_params, cnn_params):
         await asyncio.gather(*(
             svc.submit(gen_of(8, seed=i).next_batch()) for i in range(6)))
         assert svc.queue_depth == 0
+
+
+@async_test
+async def test_feature_only_heads_serve_through_buckets(mlp_params, cnn_params):
+    """Pluggable heads serve through the bucketed frontend unchanged: a
+    feature-only pipeline (no engine inference at all — empty RoutePlan)
+    answers ragged concurrent clients from pre-warmed masked entries, never
+    retraces, and emits the pass head's allow-everything verdicts."""
+    from repro.core import decisions
+
+    pipe = make_pipeline(mlp_params, cnn_params, batch_size=16,
+                         pkt_head=decisions.PassHead(),
+                         flow_head=decisions.TopKHead(), top_n=8)
+    assert len(pipe.plan().steps) == 0
+    gens = [gen_of(5, seed=1, client_id=0), gen_of(11, seed=2, client_id=1)]
+    svc = OctopusService(pipe, ServiceConfig(buckets=(8, 16)))
+    async with svc:
+        warmed = svc.trace_count
+        outs = await asyncio.gather(*(svc.submit(g.next_batch(), g.client_id)
+                                      for g in gens))
+        assert svc.trace_count == warmed
+    assert sorted(o.pkt_actions.shape for o in outs) == [(5,), (11,)]
+    for o in outs:
+        np.testing.assert_array_equal(o.pkt_actions,
+                                      np.zeros(o.pkt_actions.shape, np.int32))

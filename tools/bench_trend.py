@@ -36,6 +36,7 @@ TRACKED = (
     "pipeline_cnn_lane128_segmented_s4",
     "service_cnn_c4_b16",
     "pipeline_cnn_b128_cold131072",
+    "scenario_topk_b128_cold4096",
 )
 
 _POINT_RE = re.compile(r"^BENCH_(\d+)\.json$")
