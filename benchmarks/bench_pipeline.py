@@ -2,8 +2,10 @@
 step (paper headline rows: 31 Mpkt/s extraction, 90 kflow/s use-case 2,
 35.7 kflow/s use-case 3), comparing the order-exact scan tracker against the
 vectorized segmented tracker, per-step dispatch against chunked ``scan_len``
-dispatch, and the single-lane pipeline against hash-partitioned multi-lane
-sharding (``num_shards`` > 0 rows).
+dispatch, the eager loop against the overlapped deferred-sync runtime (the
+``_ovl0``/``_ovl1`` twin rows, with the host/device time split in the
+derived column), and the single-lane pipeline against hash-partitioned
+multi-lane sharding (``num_shards`` > 0 rows).
 
 The sharded rows are *weak scaling*, the paper's own lane-scaling axis
 (§2.2: each extractor lane serves its own port): per-lane offered load is
@@ -33,12 +35,13 @@ def _bench_one(flow_model: str, steps: int, batch: int, max_ready: int,
                table_size: int, active_flows: int, tracker: str,
                scan_len: int, num_shards: int = 0, lane_batch=None,
                seed: int = 0, quantize: bool = False, cold_size: int = 0,
-               cold_policy: str = "age", top_k=None, pay_bytes=None):
+               cold_policy: str = "age", top_k=None, pay_bytes=None,
+               overlap: bool = False, use_prefetch: bool = False):
     import contextlib
 
     import jax
 
-    from repro.data.traffic import TrafficConfig, TrafficGenerator
+    from repro.data.traffic import TrafficConfig, TrafficGenerator, prefetch
     from repro.models import paper_models
     from repro.runtime import runtime_overrides
     from repro.serving import (
@@ -56,7 +59,7 @@ def _bench_one(flow_model: str, steps: int, batch: int, max_ready: int,
         kw["pay_bytes"] = pay_bytes
     cfg = PipelineConfig(batch_size=batch, max_ready=max_ready,
                          flow_model=flow_model, table_size=table_size,
-                         tracker=tracker, scan_len=scan_len,
+                         tracker=tracker, scan_len=scan_len, overlap=overlap,
                          cold_size=cold_size, cold_policy=cold_policy, **kw)
     pkt_params = paper_models.init_paper_model("mlp", jax.random.PRNGKey(0))
     flow_params = paper_models.init_paper_model(flow_model, jax.random.PRNGKey(1))
@@ -78,7 +81,8 @@ def _bench_one(flow_model: str, steps: int, batch: int, max_ready: int,
         # slots — that collision pressure is exactly what the cold store eats
         collision_free=active_flows <= table_size))
     pipe.warmup()
-    stats = pipe.run(gen, steps=steps)
+    src = prefetch(gen.batches(steps), depth=2) if use_prefetch else gen
+    stats = pipe.run(src, steps=steps)
     return pipe, stats
 
 
@@ -201,6 +205,23 @@ def run(steps: int = 48, smoke: bool = False):
             f"pkt_per_s={s.pkt_per_s:.0f};flow_per_s={s.flow_per_s:.1f};"
             f"steps={s.steps};dispatches={s.dispatches};flows={s.flows};"
             f"evicted={s.evicted};trace_count={pipe.trace_count}")
+
+    # ---- overlapped-dispatch twins: identical shape, ovl0 = eager loop,
+    # ovl1 = deferred-sync run() + the depth-2 traffic prefetcher, so chunk
+    # k+1's generation and staging hide under chunk k's device execution.
+    # host_us/device_us in the derived column show where the time went (the
+    # device share is the EXPOSED wait — it shrinks under overlap).
+    ovl_steps = max(8, min(steps, 48) - min(steps, 48) % 8)
+    for overlap in (False, True):
+        pipe, s = _bench_one("cnn", ovl_steps, 128, 16, 1024, 64,
+                             "segmented", 8, overlap=overlap,
+                             use_prefetch=overlap)
+        yield row(
+            f"pipeline_cnn_b128_segmented_x8_ovl{int(overlap)}", s.step_us,
+            f"pkt_per_s={s.pkt_per_s:.0f};host_us={s.host_us:.0f};"
+            f"device_us={s.device_us:.0f};steps={s.steps};"
+            f"dispatches={s.dispatches};flows={s.flows};"
+            f"trace_count={pipe.trace_count}")
 
     # ---- hierarchical flow table (hot + cold): effective capacity 10^5-10^6
     # flows with a live population ~4x the hot table, so every step runs the

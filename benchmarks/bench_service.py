@@ -41,7 +41,8 @@ def _client_mixes(num_clients: int, batch: int, table_size: int):
 
 
 def _bench_one(num_clients: int, requests: int, batch: int, buckets,
-               table_size: int, num_shards: int = 0, quantize: bool = False):
+               table_size: int, num_shards: int = 0, quantize: bool = False,
+               offload: bool = True):
     import contextlib
 
     import jax
@@ -79,7 +80,8 @@ def _bench_one(num_clients: int, requests: int, batch: int, buckets,
             for c in _client_mixes(num_clients, batch, table_size)]
 
     async def drive():
-        async with OctopusService(pipe, ServiceConfig(buckets=buckets)) as svc:
+        async with OctopusService(pipe, ServiceConfig(buckets=buckets,
+                                                      offload=offload)) as svc:
             warm_traces = svc.trace_count
             await asyncio.gather(*(
                 serve_stream(svc, g, requests=requests) for g in gens))
@@ -92,24 +94,33 @@ def _bench_one(num_clients: int, requests: int, batch: int, buckets,
 def run(requests: int = 24, smoke: bool = False):
     """Yield CSV rows (name,us_per_call,derived): one multi-client service
     row per lane layout.  ``us_per_call`` is the client-observed p50 e2e."""
+    # offload=True (the default: dispatch on the executor thread, the loop
+    # stays responsive) vs the inline `_ovl0` twin — same shape, so the pair
+    # isolates what moving the blocking step off the loop is worth.
     if smoke:
-        grid = [(4, min(requests, 12), 16, (32, 64), 256, 0, False),
-                (4, min(requests, 12), 16, (32, 64), 256, 0, True)]
+        grid = [(4, min(requests, 12), 16, (32, 64), 256, 0, False, True),
+                (4, min(requests, 12), 16, (32, 64), 256, 0, False, False),
+                (4, min(requests, 12), 16, (32, 64), 256, 0, True, True)]
     else:
-        grid = [(4, requests, 16, (32, 64, 128), 1024, 0, False),
-                (4, requests, 16, (32, 64, 128), 1024, 0, True),
-                (8, requests, 24, (64, 128, 256), 1024, 0, False),
-                (4, requests, 16, (32, 64, 128), 1024, 2, False)]
-    for num_clients, reqs, batch, buckets, table_size, num_shards, quantize in grid:
+        grid = [(4, requests, 16, (32, 64, 128), 1024, 0, False, True),
+                (4, requests, 16, (32, 64, 128), 1024, 0, False, False),
+                (4, requests, 16, (32, 64, 128), 1024, 0, True, True),
+                (8, requests, 24, (64, 128, 256), 1024, 0, False, True),
+                (4, requests, 16, (32, 64, 128), 1024, 2, False, True)]
+    for (num_clients, reqs, batch, buckets, table_size, num_shards,
+         quantize, offload) in grid:
         svc, warm_traces = _bench_one(num_clients, reqs, batch, buckets,
-                                      table_size, num_shards, quantize=quantize)
+                                      table_size, num_shards,
+                                      quantize=quantize, offload=offload)
         s = svc.stats
         lanes = f"_s{num_shards}" if num_shards else ""
         lanes += "_int8" if quantize else ""
+        lanes += "" if offload else "_ovl0"
         yield row(
             f"service_cnn_c{num_clients}_b{batch}{lanes}", s.e2e.p50,
             f"pkt_per_s={s.pkt_per_s:.0f};p99_e2e_us={s.e2e.p99:.0f};"
-            f"p99_wait_us={s.wait.p99:.0f};clients={num_clients};"
+            f"p99_wait_us={s.wait.p99:.0f};host_us={s.host_us:.0f};"
+            f"device_us={s.device_us:.0f};clients={num_clients};"
             f"requests={s.served_requests};dispatches={s.dispatches};"
             f"coalesced={s.coalesced};padded={s.padded};"
             f"depth_hwm={s.depth_hwm};retraces={svc.trace_count - warm_traces}")

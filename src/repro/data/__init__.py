@@ -1,3 +1,3 @@
 from repro.data.packets import PacketTraceConfig, synth_packet_trace
 from repro.data.tokens import TokenPipeline, TokenPipelineConfig
-from repro.data.traffic import TrafficConfig, TrafficGenerator
+from repro.data.traffic import TrafficConfig, TrafficGenerator, prefetch

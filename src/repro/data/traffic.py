@@ -407,3 +407,49 @@ def merge_streams(*gens: TrafficGenerator, seed: int = 0,
         batch = g.next_batch()
         yield (g.client_id, batch) if tagged else batch
         produced += 1
+
+
+def prefetch(iterable, depth: int = 2) -> Iterator:
+    """Pull ``iterable`` on a background thread, staying up to ``depth``
+    items ahead of the consumer (bounded queue — the producer blocks when
+    the consumer falls behind, so memory stays O(depth)).
+
+    Order-preserving: the consumer sees exactly the source sequence, so a
+    prefetched pipeline run stays bit-identical.  Exception-transparent: a
+    producer error is re-raised at the consumer's next pull.  Use it with
+    the overlapped pipeline to move batch *generation* off the dispatch
+    thread as well::
+
+        pipe.run(prefetch(gen.batches(steps), depth=2), steps=steps)
+
+    The producer runs ahead by up to ``depth`` batches, so only wrap
+    bounded iterators you own: wrapping a generator shared with other
+    consumers would pull batches this consumer never sees.  The thread is a
+    daemon and starts at the first ``next()``, so an unconsumed prefetch
+    costs nothing and an abandoned one never blocks interpreter exit."""
+    import queue
+    import threading
+
+    if depth <= 0:
+        raise ValueError(f"depth must be positive, got {depth}")
+    q: queue.Queue = queue.Queue(maxsize=depth)
+    _end = object()  # sentinel: (end, exception-or-None) terminates the pull
+
+    def produce() -> None:
+        try:
+            for item in iterable:
+                q.put(item)
+        except BaseException as e:  # noqa: BLE001 — forwarded to the consumer
+            q.put((_end, e))
+            return
+        q.put((_end, None))
+
+    threading.Thread(target=produce, name="traffic-prefetch",
+                     daemon=True).start()
+    while True:
+        item = q.get()
+        if isinstance(item, tuple) and len(item) == 2 and item[0] is _end:
+            if item[1] is not None:
+                raise item[1]
+            return
+        yield item

@@ -7,6 +7,7 @@ from repro.serving.packet_path import (
     PathStats,
 )
 from repro.serving.pipeline import (
+    InflightDispatch,
     LatencyReservoir,
     OctopusPipeline,
     PipelineConfig,

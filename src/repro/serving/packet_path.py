@@ -43,6 +43,8 @@ class PathStats:
     calls: int = 0
     total_s: float = 0.0
     items: int = 0
+    host_s: float = 0.0  # host share: feature staging + dispatch enqueue
+    device_s: float = 0.0  # exposed device wait (the block_until_ready)
 
     @property
     def latency_us(self) -> float:
@@ -53,20 +55,35 @@ class PathStats:
         return self.total_s / self.calls * 1e6
 
     @property
+    def host_us(self) -> float:
+        """Mean host share per call; ``nan`` while idle."""
+        return self.host_s / self.calls * 1e6 if self.calls else math.nan
+
+    @property
+    def device_us(self) -> float:
+        """Mean exposed device wait per call; ``nan`` while idle."""
+        return self.device_s / self.calls * 1e6 if self.calls else math.nan
+
+    @property
     def throughput(self) -> float:
         """Items/sec; 0.0 until something was processed."""
         if self.items == 0:
             return 0.0
         return self.items / max(self.total_s, 1e-12)
 
-    def record(self, dt_s: float, items: int) -> None:
+    def record(self, dt_s: float, items: int, *, host_s: float = 0.0,
+               device_s: float = 0.0) -> None:
         """Fold one timed call in.  Empty calls are dropped — a zero-item
-        submit must not skew per-call latency or throughput."""
+        submit must not skew per-call latency or throughput.  The optional
+        ``host_s``/``device_s`` attribute ``dt_s`` between host work and the
+        exposed device wait (callers that don't measure leave them 0)."""
         if items == 0:
             return
         self.calls += 1
         self.total_s += dt_s
         self.items += items
+        self.host_s += host_s
+        self.device_s += device_s
 
 
 class PacketEngine:
@@ -166,8 +183,12 @@ class PacketPath:
         if feats.shape[0] == 0:  # empty submit: no inference, no stats skew
             return np.zeros((0,), np.int32)
         t0 = time.perf_counter()
-        out = jax.block_until_ready(self._infer(self.params, feats))
-        self.stats.record(time.perf_counter() - t0, feats.shape[0])
+        fut = self._infer(self.params, feats)  # async dispatch: enqueue only
+        t1 = time.perf_counter()
+        out = jax.block_until_ready(fut)
+        t2 = time.perf_counter()
+        self.stats.record(t2 - t0, feats.shape[0],
+                          host_s=t1 - t0, device_s=t2 - t1)
         actions = np.asarray(out)
         self.rules.update(np.asarray(packets.tuple_hash), actions)
         return actions
@@ -207,8 +228,12 @@ class FlowPath:
         if flow_inputs.shape[0] == 0:  # empty submit: no inference, no stats skew
             return np.zeros((0,), np.int32)
         t0 = time.perf_counter()
-        logits = jax.block_until_ready(self._infer(self.params, flow_inputs))
-        self.stats.record(time.perf_counter() - t0, flow_inputs.shape[0])
+        fut = self._infer(self.params, flow_inputs)  # async dispatch
+        t1 = time.perf_counter()
+        logits = jax.block_until_ready(fut)
+        t2 = time.perf_counter()
+        self.stats.record(t2 - t0, flow_inputs.shape[0],
+                          host_s=t1 - t0, device_s=t2 - t1)
         actions, cls = decisions.decide_class(logits)
         self.rules.update(flow_ids, np.asarray(actions), np.asarray(cls))
         return np.asarray(cls)

@@ -38,6 +38,20 @@ feedback (step 6, host side) is then applied once per chunk, in step order —
 decisions lag the wire by at most ``scan_len`` microbatches, the price of
 dispatch amortization.  After warmup no call retraces (``trace_count`` stays
 1; asserted in tests).
+
+With ``overlap=True`` the loop goes one step further and stops serializing
+host work with device work: ``step``/``step_many`` return an
+:class:`InflightDispatch` handle immediately after *enqueueing* the jit call
+(JAX dispatches asynchronously — the arrays come back as futures), and
+``run`` becomes a double-buffered producer/consumer that stages chunk k+1
+(batch pull, stacking, sharded ``partition_batch`` hashing) while chunk k
+executes, waiting handles strictly in dispatch order.  Rule-table feedback
+runs inside ``wait()`` — lagged by the one in-flight chunk but applied in
+step order, so the run is bit-identical to the eager loop (differentially
+tested).  :class:`PipelineStats` splits ``host_us`` vs ``device_us`` per
+dispatch so the overlap is measured, not claimed: ``device_us`` is the
+*exposed* device wait (what the host actually blocked on), which shrinks as
+staging hides under execution.
 """
 from __future__ import annotations
 
@@ -77,6 +91,8 @@ class PipelineConfig:
     pay_bytes: int = paper_models.TF_BYTES  # payload bytes per packet
     tracker: str = "segmented"  # "segmented" (vectorized) | "scan" (oracle)
     scan_len: int = 1  # microbatches fused per dispatch (lax.scan length)
+    overlap: bool = False  # deferred-sync dispatch: step/step_many return an
+    # InflightDispatch handle; run() double-buffers over it
     cold_size: int = 0  # second-level (cold) flow table slots; 0 disables
     cold_policy: str = "age"  # cold eviction policy: "age" | "lru"
     deny_threshold: float = 0.5  # default BinaryHead packet-deny threshold
@@ -221,16 +237,23 @@ class PipelineStats:
     dispatches: int = 0  # host->device round-trips (chunking lowers it below
     # steps; sharded overflow rounds raise it above)
     padded: int = 0  # dispatched-but-masked lane rows (sharding skew cost)
+    host_s: float = 0.0  # host-side share: staging, enqueue, feedback, pulls
+    device_s: float = 0.0  # EXPOSED device wait — what the host blocked on,
+    # not raw execution time; overlap shrinks it by hiding staging under it
     lat: LatencyReservoir = field(default_factory=LatencyReservoir)
 
     def record_dispatch(self, dt: float, *, packets: int, steps: int = 1,
                         dispatches: int = 1, flows: int = 0,
                         new_flows: int = 0, evicted: int = 0,
                         spilled: int = 0, promoted: int = 0,
-                        padded: int = 0) -> None:
+                        padded: int = 0, host_s: float = 0.0,
+                        device_s: float = 0.0) -> None:
         """Fold one timed dispatch (or fused multi-step chunk) into the
         counters.  ``packets`` must be the real packet count — callers that
-        dispatch padded lanes pass the keep-mask total, not the lane shape."""
+        dispatch padded lanes pass the keep-mask total, not the lane shape.
+        ``host_s``/``device_s`` split ``dt`` into host work vs exposed device
+        wait; callers that don't measure the split leave them 0 (the totals
+        stay correct, only the attribution is unknown)."""
         self.total_s += dt
         self.packets += packets
         self.steps += steps
@@ -241,6 +264,8 @@ class PipelineStats:
         self.spilled += spilled
         self.promoted += promoted
         self.padded += padded
+        self.host_s += host_s
+        self.device_s += device_s
         self.lat.add(dt * 1e6)  # one sample per timed region (us)
 
     @property
@@ -263,6 +288,19 @@ class PipelineStats:
         return self.total_s / self.dispatches * 1e6 if self.dispatches else float("nan")
 
     @property
+    def host_us(self) -> float:
+        """Mean host-side time per dispatch: staging + enqueue + rule-table
+        feedback (+ the producer pull when driven by ``run``)."""
+        return self.host_s / self.dispatches * 1e6 if self.dispatches else float("nan")
+
+    @property
+    def device_us(self) -> float:
+        """Mean *exposed* device wait per dispatch — the block the host
+        could not hide.  Under ``overlap`` this drops below the raw device
+        time because staging for the next chunk runs during execution."""
+        return self.device_s / self.dispatches * 1e6 if self.dispatches else float("nan")
+
+    @property
     def p50_us(self) -> float:
         """Median timed-dispatch wall time (``nan`` when idle)."""
         return self.lat.p50
@@ -272,6 +310,52 @@ class PipelineStats:
         """99th-percentile timed-dispatch wall time (``nan`` when idle) —
         the bounded-tail claim the serving frontend is measured against."""
         return self.lat.p99
+
+
+class InflightDispatch:
+    """Handle for one deferred-sync dispatch (``PipelineConfig.overlap``).
+
+    The device work is already *enqueued* when the handle exists (JAX async
+    dispatch returned future arrays); nothing has been blocked on.
+    :meth:`wait` blocks on the outputs, applies the rule-table feedback
+    (step 6) and folds the dispatch into the pipeline stats — exactly what
+    the eager path does inline.  Because the rule table never feeds into the
+    device computation, a sequence of handles waited **in dispatch order**
+    is bit-identical to the eager loop: feedback lags the wire by at most
+    the in-flight dispatch, but lands in the same step order.
+
+    ``wait`` is idempotent — the first call resolves and caches the
+    :class:`PipelineStepOutput`, later calls return it (the dispatch is
+    recorded in stats exactly once).  :meth:`add_host_time` attributes host
+    work done on this dispatch's behalf while a previous one was in flight
+    (the double-buffered ``run`` loop charges the batch pull here)."""
+
+    __slots__ = ("steps", "packets", "_finish", "_host_extra_s", "_out")
+
+    def __init__(self, finish, *, steps: int, packets: int):
+        self._finish = finish  # closure(host_extra_s) -> PipelineStepOutput
+        self.steps = steps  # pipeline steps this dispatch advances
+        self.packets = packets  # real packets it carries
+        self._host_extra_s = 0.0
+        self._out: Optional[PipelineStepOutput] = None
+
+    @property
+    def done(self) -> bool:
+        """True once :meth:`wait` has resolved this handle."""
+        return self._out is not None
+
+    def add_host_time(self, dt_s: float) -> None:
+        """Charge host time spent on this dispatch's behalf (producer pull,
+        staging) to its stats record.  No effect after :meth:`wait`."""
+        self._host_extra_s += dt_s
+
+    def wait(self) -> PipelineStepOutput:
+        """Block until the device outputs are ready, apply feedback, record
+        stats; return the step output.  Idempotent."""
+        if self._out is None:
+            self._out = self._finish(self._host_extra_s)
+            self._finish = None  # drop the closure (it captures device refs)
+        return self._out
 
 
 class OctopusPipeline:
@@ -534,28 +618,52 @@ class OctopusPipeline:
                               flow_cls[mask])
         return n_flows
 
-    def step(self, packets: ft.PacketBatch) -> PipelineStepOutput:
-        """Run one microbatch through the loop and fold the decisions into
-        the rule table.  ``packets`` must have ``batch_size`` rows (static
-        shape — a different size would recompile)."""
+    def _dispatch_step(self, packets: ft.PacketBatch) -> InflightDispatch:
+        """Enqueue one microbatch (steps 2-5) without blocking — JAX async
+        dispatch hands the outputs back as future arrays, so the host is
+        free to stage the next chunk while this one executes.  The returned
+        handle's ``wait`` blocks, applies feedback and records stats."""
         n = self._check_batch(packets)
         t0 = time.perf_counter()
         self.state, out = self._step_fn(self.state, packets)
-        jax.block_until_ready((self.state, out))
-        dt = time.perf_counter() - t0
+        enqueue_s = time.perf_counter() - t0
         self._step_warmed = True  # compiled now, whatever the entry path
 
-        n_flows = self._feedback(
-            np.asarray(packets.tuple_hash), np.asarray(out.pkt_actions),
-            np.asarray(out.drained.mask), np.asarray(out.drained.tuple_id),
-            np.asarray(out.flow_actions), np.asarray(out.flow_cls))
+        def finish(host_extra_s: float) -> PipelineStepOutput:
+            # block on the outputs only: under overlap the state has already
+            # been donated to the next enqueued dispatch (same computation,
+            # so `out` ready implies the state update finished too)
+            t1 = time.perf_counter()
+            jax.block_until_ready(out)
+            device_s = time.perf_counter() - t1
+            t2 = time.perf_counter()
+            n_flows = self._feedback(
+                np.asarray(packets.tuple_hash), np.asarray(out.pkt_actions),
+                np.asarray(out.drained.mask),
+                np.asarray(out.drained.tuple_id),
+                np.asarray(out.flow_actions), np.asarray(out.flow_cls))
+            host_s = (enqueue_s + host_extra_s
+                      + (time.perf_counter() - t2))
+            self.stats.record_dispatch(
+                host_s + device_s, packets=n, flows=n_flows,
+                new_flows=int(out.new_flows), evicted=int(out.evicted),
+                spilled=int(out.spilled), promoted=int(out.promoted),
+                host_s=host_s, device_s=device_s)
+            return out
 
-        self.stats.record_dispatch(dt, packets=n, flows=n_flows,
-                                   new_flows=int(out.new_flows),
-                                   evicted=int(out.evicted),
-                                   spilled=int(out.spilled),
-                                   promoted=int(out.promoted))
-        return out
+        return InflightDispatch(finish, steps=1, packets=n)
+
+    def step(self, packets: ft.PacketBatch):
+        """Run one microbatch through the loop and fold the decisions into
+        the rule table.  ``packets`` must have ``batch_size`` rows (static
+        shape — a different size would recompile).
+
+        Returns the :class:`PipelineStepOutput` eagerly, or — with
+        ``cfg.overlap`` — an :class:`InflightDispatch` that the caller waits
+        in dispatch order (feedback is then lagged by the one in-flight
+        dispatch, still bit-identical; see the class docstring)."""
+        h = self._dispatch_step(packets)
+        return h if self.cfg.overlap else h.wait()
 
     # ---------------------------------------------------- bucketed (masked)
     def warm_bucket(self, bucket: int) -> None:
@@ -588,21 +696,26 @@ class OctopusPipeline:
         t0 = time.perf_counter()
         self.state, out = self._masked_fn(self.state, packets,
                                           jnp.asarray(k))
+        t1 = time.perf_counter()
         jax.block_until_ready((self.state, out))
-        dt = time.perf_counter() - t0
+        t2 = time.perf_counter()
         self._warm_buckets.add(bucket)  # compiled now, whatever the path
 
         n_flows = self._feedback(
             np.asarray(packets.tuple_hash)[k], np.asarray(out.pkt_actions)[k],
             np.asarray(out.drained.mask), np.asarray(out.drained.tuple_id),
             np.asarray(out.flow_actions), np.asarray(out.flow_cls))
+        t3 = time.perf_counter()
 
-        self.stats.record_dispatch(dt, packets=n, flows=n_flows,
+        host_s, device_s = (t1 - t0) + (t3 - t2), t2 - t1
+        self.stats.record_dispatch(host_s + device_s, packets=n,
+                                   flows=n_flows,
                                    new_flows=int(out.new_flows),
                                    evicted=int(out.evicted),
                                    spilled=int(out.spilled),
                                    promoted=int(out.promoted),
-                                   padded=bucket - n)
+                                   padded=bucket - n,
+                                   host_s=host_s, device_s=device_s)
         return out
 
     def _chunk_feedback(self, batches: Sequence[ft.PacketBatch],
@@ -626,12 +739,12 @@ class OctopusPipeline:
                                       flow_cls[j])
         return n_flows
 
-    def step_many(self, batches: Sequence[ft.PacketBatch]) -> PipelineStepOutput:
-        """Run exactly ``scan_len`` microbatches as ONE device dispatch
-        (``lax.scan`` over the fused step) and fold all decisions into the
-        rule table afterwards, in step order.  Returns the stacked outputs
-        (leading ``scan_len`` axis).  Feedback granularity is the chunk:
-        rule-table updates land after the whole chunk computes."""
+    def _dispatch_chunk(self, batches: Sequence[ft.PacketBatch]
+                        ) -> InflightDispatch:
+        """Enqueue one fused ``scan_len`` chunk without blocking: the host
+        stacking happens now (charged to ``host_us``), the ``lax.scan``
+        dispatch returns future arrays, and the handle's ``wait`` blocks +
+        applies the per-step feedback in order."""
         L = self.cfg.scan_len
         batches = list(batches)
         if len(batches) != L:
@@ -639,21 +752,41 @@ class OctopusPipeline:
                              f"microbatches, got {len(batches)}")
         for b in batches:
             self._check_batch(b)
-        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *batches)
-
         t0 = time.perf_counter()
+        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *batches)
         self.state, out = self._chunk_fn(self.state, stacked)
-        jax.block_until_ready((self.state, out))
-        dt = time.perf_counter() - t0
+        enqueue_s = time.perf_counter() - t0
+        n = L * self.cfg.batch_size
 
-        n_flows = self._chunk_feedback(batches, out)
-        self.stats.record_dispatch(
-            dt, packets=L * self.cfg.batch_size, steps=L, flows=n_flows,
-            new_flows=int(np.asarray(out.new_flows).sum()),
-            evicted=int(np.asarray(out.evicted).sum()),
-            spilled=int(np.asarray(out.spilled).sum()),
-            promoted=int(np.asarray(out.promoted).sum()))
-        return out
+        def finish(host_extra_s: float) -> PipelineStepOutput:
+            t1 = time.perf_counter()
+            jax.block_until_ready(out)
+            device_s = time.perf_counter() - t1
+            t2 = time.perf_counter()
+            n_flows = self._chunk_feedback(batches, out)
+            host_s = (enqueue_s + host_extra_s
+                      + (time.perf_counter() - t2))
+            self.stats.record_dispatch(
+                host_s + device_s, packets=n, steps=L, flows=n_flows,
+                new_flows=int(np.asarray(out.new_flows).sum()),
+                evicted=int(np.asarray(out.evicted).sum()),
+                spilled=int(np.asarray(out.spilled).sum()),
+                promoted=int(np.asarray(out.promoted).sum()),
+                host_s=host_s, device_s=device_s)
+            return out
+
+        return InflightDispatch(finish, steps=L, packets=n)
+
+    def step_many(self, batches: Sequence[ft.PacketBatch]):
+        """Run exactly ``scan_len`` microbatches as ONE device dispatch
+        (``lax.scan`` over the fused step) and fold all decisions into the
+        rule table afterwards, in step order.  Returns the stacked outputs
+        (leading ``scan_len`` axis) — or, with ``cfg.overlap``, an
+        :class:`InflightDispatch` to be waited in dispatch order.  Feedback
+        granularity is the chunk: rule-table updates land after the whole
+        chunk computes."""
+        h = self._dispatch_chunk(batches)
+        return h if self.cfg.overlap else h.wait()
 
     def run(self, traffic: Iterable[ft.PacketBatch],
             steps: Optional[int] = None) -> PipelineStats:
@@ -662,25 +795,51 @@ class OctopusPipeline:
         pass ``steps`` to bound it) and return the sustained stats.  With
         ``scan_len > 1`` microbatches dispatch in chunks of ``scan_len``; a
         final partial chunk (iterator exhausted or ``steps`` not a multiple)
-        runs per-step."""
+        runs per-step.
+
+        With ``cfg.overlap`` the loop is a double-buffered producer/consumer:
+        chunk k+1 is pulled from the iterator and *enqueued* while chunk k
+        executes on device, and chunk k's handle is waited (feedback + stats)
+        only then — strictly in dispatch order, so the run is bit-identical
+        to the eager loop.  The iterator pull is charged to ``host_us`` in
+        BOTH modes, so overlap-on/off stats compare at the same boundary;
+        wrap the source in :func:`repro.data.traffic.prefetch` to move batch
+        *generation* onto a background thread as well."""
         it = iter(traffic)
         L = self.cfg.scan_len
         done = 0
+        pending: Optional[InflightDispatch] = None
+
+        def advance(handle: InflightDispatch, pull_s: float) -> None:
+            nonlocal pending
+            handle.add_host_time(pull_s)
+            if not self.cfg.overlap:
+                handle.wait()
+                return
+            if pending is not None:
+                pending.wait()  # chunk k-1: lagged feedback, in step order
+            pending = handle
+
         while steps is None or done < steps:
             want = L if steps is None else min(L, steps - done)
             # islice, not enumerate+break: never pull a batch beyond `steps`
             # (a generator reused across run() calls must not drop batches)
+            t0 = time.perf_counter()
             chunk = list(itertools.islice(it, want))
+            pull_s = time.perf_counter() - t0
             if not chunk:
                 break
             if L > 1 and len(chunk) == L:
-                self.step_many(chunk)
+                advance(self._dispatch_chunk(chunk), pull_s)
             else:
                 if L > 1:  # partial-chunk fallback: warm outside the timing
                     self._warm_step()
                 for batch in chunk:
-                    self.step(batch)
+                    advance(self._dispatch_step(batch), pull_s)
+                    pull_s = 0.0  # charge the pull to the first step only
             done += len(chunk)
+        if pending is not None:
+            pending.wait()  # drain the in-flight tail
         return self.stats
 
     def reset(self) -> None:

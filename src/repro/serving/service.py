@@ -23,13 +23,22 @@ the shape dataplane co-processors (and batch LLM servers like SHARK's
     end-to-end latency (bounded :class:`~repro.serving.pipeline.LatencyReservoir`
     samples) plus queue-depth high-water marks in :class:`ServiceStats`.
 
-The device dispatch itself stays synchronous inside the dispatcher task —
-the tracker state is a sequential carry, there is exactly one engine —
-so ``asyncio`` here buys exactly what the paper's wire interface buys the
-FPGA: many independent arrival processes multiplexed into one fixed-shape
-compute loop.  Clients run closed-loop (``await submit(...)``) and the
-batcher's coalescing is where concurrency turns into throughput: N clients
-awaiting together become one padded bucket dispatch instead of N tiny ones.
+The device dispatch stays *serialized* — the tracker state is a sequential
+carry, there is exactly one engine — but with ``ServiceConfig.offload``
+(the default) it runs on a single-thread executor instead of the event
+loop: clients keep enqueueing while a device step executes, instead of only
+in the ``batch_wait_s`` grace window, so the next dispatch coalesces what
+arrived *during* the current one.  All bookkeeping (futures, queue depth,
+admission events) stays on the loop side — only the pack + ``step_masked``
+block moves off it.  A failing dispatch resolves every coalesced request's
+future with the error, returns the staging buffer to the pool, and restores
+the queue depth, so admission control never wedges and the service keeps
+serving (regression-tested).  ``asyncio`` here buys exactly what the
+paper's wire interface buys the FPGA: many independent arrival processes
+multiplexed into one fixed-shape compute loop.  Clients run closed-loop
+(``await submit(...)``) and the batcher's coalescing is where concurrency
+turns into throughput: N clients awaiting together become one padded bucket
+dispatch instead of N tiny ones.
 
 Correctness: a request of size ``b < bucket`` padded-then-served produces
 verdicts and tracker state **bit-identical** to serving it through the
@@ -41,6 +50,7 @@ from __future__ import annotations
 import asyncio
 import time
 from collections import deque
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Optional, Union
 
@@ -69,6 +79,9 @@ class ServiceConfig:
     batch_wait_s: float = 0.0  # grace the batcher waits to coalesce more
     sample_capacity: int = 1024  # latency reservoir depth (per scope)
     pool_depth: int = 4  # staging buffers retained per bucket
+    offload: bool = True  # run pack + device dispatch on an executor thread
+    # (event loop stays free to accept submits); False = inline (the old
+    # behavior, kept for the overlap-on/off bench twins)
 
     def __post_init__(self):
         if not self.buckets or any(b <= 0 for b in self.buckets):
@@ -94,9 +107,13 @@ class ServeResult:
     # (n,) int32 packet-head verdicts (default binary head: 0 allow / 1 deny;
     # pluggable heads — PipelineConfig.pkt_head — define their own codes)
     pkt_actions: np.ndarray
-    bucket: int  # the pre-warmed entry point that served it (largest chunk's)
+    bucket: int  # largest bucket this request ACTUALLY dispatched in — the
+    # coalesced dispatch's bucket, not the request's own size class (0 for
+    # the empty-submit fast path, which never dispatches)
     queue_wait_s: float  # enqueue -> dispatch start
     e2e_s: float  # enqueue -> verdicts ready
+    buckets: tuple[int, ...] = ()  # per-chunk dispatch buckets, in order
+    # (an oversize submit splits into several chunks; each records its own)
 
 
 @dataclass(frozen=True)
@@ -144,7 +161,12 @@ class ServiceStats:
     depth_hwm: int = 0  # queue-depth high-water mark (packets)
     pool_hits: int = 0
     pool_misses: int = 0
-    wall_s: float = 0.0  # start() -> last dispatch completion
+    failed_dispatches: int = 0  # dispatches whose step raised
+    failed: int = 0  # packets answered with an error instead of verdicts
+    host_s: float = 0.0  # dispatch host share: staging-buffer pack + slicing
+    device_s: float = 0.0  # dispatch device share: the masked-step block
+    started_at: float = 0.0  # perf_counter anchor set by start(); 0 = never
+    stopped_at: float = 0.0  # freeze anchor set by stop(); 0 while running
     wait: LatencyReservoir = field(default_factory=LatencyReservoir)
     e2e: LatencyReservoir = field(default_factory=LatencyReservoir)
     clients: dict[int, ClientStats] = field(default_factory=dict)
@@ -158,9 +180,32 @@ class ServiceStats:
         return st
 
     @property
+    def wall_s(self) -> float:
+        """Service wall clock, snapshotted at READ time while the service
+        runs and frozen at :meth:`OctopusService.stop`.  (It used to be a
+        field refreshed only inside the dispatcher, so any read after the
+        last dispatch — an idle tail, a post-run report — used a stale
+        clock and overstated ``pkt_per_s``.)"""
+        if not self.started_at:
+            return 0.0
+        end = self.stopped_at if self.stopped_at else time.perf_counter()
+        return max(end - self.started_at, 0.0)
+
+    @property
     def pkt_per_s(self) -> float:
         """Sustained served packet rate over the service's wall clock."""
-        return self.served / self.wall_s if self.wall_s > 0 else 0.0
+        wall = self.wall_s
+        return self.served / wall if wall > 0 else 0.0
+
+    @property
+    def host_us(self) -> float:
+        """Mean host share per dispatch (pack + result slicing)."""
+        return self.host_s / self.dispatches * 1e6 if self.dispatches else float("nan")
+
+    @property
+    def device_us(self) -> float:
+        """Mean device share per dispatch (the masked-step block)."""
+        return self.device_s / self.dispatches * 1e6 if self.dispatches else float("nan")
 
 
 class _BufferPool:
@@ -204,6 +249,7 @@ class _Pending:
     enqueued_at: float
     future: asyncio.Future
     dispatched_at: float = 0.0
+    bucket: int = 0  # the bucket this chunk actually dispatched in
 
 
 class OctopusService:
@@ -235,8 +281,8 @@ class OctopusService:
         self._work: Optional[asyncio.Event] = None
         self._space: Optional[asyncio.Event] = None
         self._dispatcher: Optional[asyncio.Task] = None
+        self._executor: Optional[ThreadPoolExecutor] = None
         self._stopping = False
-        self._started_at = 0.0
 
     # ------------------------------------------------------------- lifecycle
     @property
@@ -252,7 +298,8 @@ class OctopusService:
 
     async def start(self) -> None:
         """Pre-compile every bucket's masked entry point (outside any timed
-        region) and start the dispatcher task."""
+        region) and start the dispatcher task (plus its single-thread
+        dispatch executor when ``cfg.offload``)."""
         if self._dispatcher is not None:
             raise RuntimeError("service already started")
         for b in self.cfg.buckets:
@@ -260,18 +307,29 @@ class OctopusService:
         self._work = asyncio.Event()
         self._space = asyncio.Event()
         self._stopping = False
-        self._started_at = time.perf_counter()
+        if self.cfg.offload:
+            # exactly one worker: the tracker state is a sequential carry,
+            # so dispatches must serialize — the thread only exists to keep
+            # the event loop free while a device step blocks
+            self._executor = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="octopus-dispatch")
+        self.stats.started_at = time.perf_counter()
+        self.stats.stopped_at = 0.0
         self._dispatcher = asyncio.create_task(self._dispatch_loop())
 
     async def stop(self) -> None:
         """Drain the queue (every accepted request still gets its result),
-        then stop the dispatcher."""
+        then stop the dispatcher and freeze the wall clock."""
         if self._dispatcher is None:
             return
         self._stopping = True
         self._work.set()
         await self._dispatcher
         self._dispatcher = None
+        if self._executor is not None:
+            self._executor.shutdown(wait=True)
+            self._executor = None
+        self.stats.stopped_at = time.perf_counter()
 
     async def __aenter__(self) -> "OctopusService":
         await self.start()
@@ -339,9 +397,16 @@ class OctopusService:
         gstats.depth_hwm = max(gstats.depth_hwm, self._depth)
         self._work.set()
 
-        await asyncio.gather(*(c.future for c in chunks))
+        # return_exceptions so every chunk's error is consumed here — one
+        # failed dispatch fails the whole request (partial verdicts would be
+        # unusable), without "exception never retrieved" noise from siblings
+        results = await asyncio.gather(*(c.future for c in chunks),
+                                       return_exceptions=True)
+        errors = [r for r in results if isinstance(r, BaseException)]
+        if errors:
+            raise errors[0]
         done = time.perf_counter()
-        actions = np.concatenate([c.future.result() for c in chunks])
+        actions = np.concatenate(results)
         wait_s = chunks[0].dispatched_at - now
         e2e_s = done - now
         gstats.served_requests += 1
@@ -350,8 +415,9 @@ class OctopusService:
         for st in (gstats, cstats):
             st.wait.add(wait_s * 1e6)
             st.e2e.add(e2e_s * 1e6)
-        return ServeResult(client_id, actions,
-                           self._bucket_for(chunks[-1].n), wait_s, e2e_s)
+        buckets = tuple(c.bucket for c in chunks)
+        return ServeResult(client_id, actions, max(buckets), wait_s, e2e_s,
+                           buckets)
 
     # ------------------------------------------------------------- dispatcher
     def _bucket_for(self, n: int) -> int:
@@ -373,45 +439,84 @@ class OctopusService:
             total += nxt.n
         return reqs
 
-    def _dispatch_one(self, reqs: list[_Pending]) -> None:
-        """Pack a coalesced run into a pooled staging buffer, pad to the
-        bucket, dispatch the masked step, and answer every request with its
-        slice of the verdicts."""
+    def _dispatch_blocking(self, reqs: list[_Pending]
+                           ) -> tuple[np.ndarray, dict, int, float, float]:
+        """The blocking half of one dispatch — pack a coalesced run into a
+        pooled staging buffer, pad to the bucket, run the masked step.  Runs
+        on the dispatch executor under ``cfg.offload`` (inline otherwise);
+        it touches no asyncio state, only the pipeline and the pool.  On a
+        failing step the buffer is returned to the pool HERE (this side owns
+        it); futures and queue depth are the loop side's to restore.
+        Returns ``(actions, buf, bucket, host_s, device_s)``."""
         total = sum(r.n for r in reqs)
         bucket = self._bucket_for(total)
+        t0 = time.perf_counter()
         buf = self._pool.acquire(bucket)
-        off = 0
-        for r in reqs:
-            for f in _SCALAR_FIELDS:
-                buf[f][off:off + r.n] = r.leaves[f]
-            buf["payload"][off:off + r.n] = r.leaves["payload"]
-            off += r.n
-        for f in _SCALAR_FIELDS:  # zero the pad tail: stale rows out
-            buf[f][total:] = 0
-        buf["payload"][total:] = 0
-        buf["keep"][:total] = True
-        buf["keep"][total:] = False
+        try:
+            off = 0
+            for r in reqs:
+                for f in _SCALAR_FIELDS:
+                    buf[f][off:off + r.n] = r.leaves[f]
+                buf["payload"][off:off + r.n] = r.leaves["payload"]
+                off += r.n
+            for f in _SCALAR_FIELDS:  # zero the pad tail: stale rows out
+                buf[f][total:] = 0
+            buf["payload"][total:] = 0
+            buf["keep"][:total] = True
+            buf["keep"][total:] = False
 
-        t_dispatch = time.perf_counter()
-        for r in reqs:
-            r.dispatched_at = t_dispatch
-        batch = PacketBatch(
-            **{f: jnp.asarray(buf[f]) for f in _SCALAR_FIELDS},
-            payload=jnp.asarray(buf["payload"]))
-        out = self.pipeline.step_masked(batch, buf["keep"])
-        actions = np.asarray(out.pkt_actions)
+            t_dispatch = time.perf_counter()
+            for r in reqs:
+                r.dispatched_at = t_dispatch
+                r.bucket = bucket
+            batch = PacketBatch(
+                **{f: jnp.asarray(buf[f]) for f in _SCALAR_FIELDS},
+                payload=jnp.asarray(buf["payload"]))
+            t1 = time.perf_counter()
+            out = self.pipeline.step_masked(batch, buf["keep"])
+            t2 = time.perf_counter()
+            actions = np.asarray(out.pkt_actions)
+            host_s = (t1 - t0) + (time.perf_counter() - t2)
+            return actions, buf, bucket, host_s, t2 - t1
+        except BaseException:
+            self._pool.release(buf)
+            raise
 
-        off = 0
-        for r in reqs:
-            r.future.set_result(actions[off:off + r.n].copy())
-            off += r.n
-        self._pool.release(buf)
-        self._depth -= total
-        self._space.set()
-        self.stats.dispatches += 1
-        self.stats.coalesced += len(reqs)
-        self.stats.padded += bucket - total
-        self.stats.wall_s = time.perf_counter() - self._started_at
+    async def _dispatch_one(self, reqs: list[_Pending]) -> None:
+        """One full dispatch: run the blocking half (off-loop under
+        ``cfg.offload``), then answer every coalesced request with its slice
+        of the verdicts — or, if the step raised, with the error.  Queue
+        depth and the space event are restored on BOTH paths, so admission
+        control never wedges on a failing dispatch."""
+        total = sum(r.n for r in reqs)
+        try:
+            if self._executor is not None:
+                actions, buf, bucket, host_s, device_s = \
+                    await asyncio.get_running_loop().run_in_executor(
+                        self._executor, self._dispatch_blocking, reqs)
+            else:
+                actions, buf, bucket, host_s, device_s = \
+                    self._dispatch_blocking(reqs)
+        except Exception as e:
+            self.stats.failed_dispatches += 1
+            self.stats.failed += total
+            for r in reqs:
+                if not r.future.done():
+                    r.future.set_exception(e)
+        else:
+            off = 0
+            for r in reqs:
+                r.future.set_result(actions[off:off + r.n].copy())
+                off += r.n
+            self._pool.release(buf)
+            self.stats.dispatches += 1
+            self.stats.coalesced += len(reqs)
+            self.stats.padded += bucket - total
+            self.stats.host_s += host_s
+            self.stats.device_s += device_s
+        finally:
+            self._depth -= total
+            self._space.set()
 
     async def _dispatch_loop(self) -> None:
         while True:
@@ -430,7 +535,7 @@ class OctopusService:
                 await asyncio.sleep(0)
             if not self._queue:
                 continue
-            self._dispatch_one(self._take_coalesced())
+            await self._dispatch_one(self._take_coalesced())
 
 
 async def serve_stream(service: OctopusService, gen: TrafficGenerator, *,

@@ -63,6 +63,7 @@ from repro.distributed import sharding as shd
 from repro.launch.mesh import make_lanes_mesh
 from repro.runtime import RoutePlan, RuntimeConfig, lane_scope, name_scope, platform
 from repro.serving.pipeline import (
+    InflightDispatch,
     OctopusPipeline,
     PipelineConfig,
     PipelineStepOutput,
@@ -262,60 +263,78 @@ class ShardedOctopusPipeline(OctopusPipeline):
         return (len(rounds) * self.num_shards * self.lane_batch
                 - self.cfg.batch_size)
 
-    def step(self, packets: ft.PacketBatch) -> PipelineStepOutput:
-        """One global microbatch through all lanes: partition by tuple-hash,
-        dispatch any overflow merge rounds, then the fused drain step; fold
-        the merged decisions into the rule table exactly like the single-lane
-        pipeline."""
+    def _dispatch_step(self, packets: ft.PacketBatch) -> InflightDispatch:
+        """One global microbatch through all lanes, deferred-sync: the hash
+        partition and EVERY round's enqueue (overflow merges + the fused
+        drain step) happen now, without a single device readback — the old
+        eager loop blocked on each merge round's counters mid-step.  The
+        handle's ``wait`` blocks once, overlays the multi-round packet
+        verdicts, applies feedback and records stats."""
         n = self._check_batch(packets)
-        rounds = self._partition(packets)
-        pkt_merged = np.zeros((n,), np.int32) if len(rounds) > 1 else None
-
         t0 = time.perf_counter()
-        total_new = total_ev = total_sp = total_pr = 0
+        rounds = self._partition(packets)
+        merge_outs = []
         for sb in rounds[:-1]:
             (self.state, new, ev, sp, pr,
              acts) = self._merge_fn(self.state, sb.shards, sb.keep)
-            total_new += int(np.asarray(new).sum())
-            total_ev += int(np.asarray(ev).sum())
-            total_sp += int(np.asarray(sp).sum())
-            total_pr += int(np.asarray(pr).sum())
-            k = np.asarray(sb.keep)
-            pkt_merged[np.asarray(sb.src)[k]] = np.asarray(acts)[k]
+            merge_outs.append((sb, new, ev, sp, pr, acts))
         last = rounds[-1]
         self.state, out = self._step_fn(self.state, last.shards, last.keep,
                                         last.src)
-        jax.block_until_ready((self.state, out))
-        dt = time.perf_counter() - t0
+        enqueue_s = time.perf_counter() - t0
         self._step_warmed = True
 
-        if pkt_merged is not None:  # overlay the final round's packet verdicts
-            pos = np.asarray(last.src)[np.asarray(last.keep)]
-            pkt_merged[pos] = np.asarray(out.pkt_actions)[pos]
-            out = out._replace(
-                pkt_actions=jnp.asarray(pkt_merged),
-                new_flows=jnp.int32(total_new + int(out.new_flows)),
-                evicted=jnp.int32(total_ev + int(out.evicted)),
-                spilled=jnp.int32(total_sp + int(out.spilled)),
-                promoted=jnp.int32(total_pr + int(out.promoted)))
+        def finish(host_extra_s: float) -> PipelineStepOutput:
+            t1 = time.perf_counter()
+            jax.block_until_ready(out)
+            device_s = time.perf_counter() - t1
+            t2 = time.perf_counter()
+            merged = out
+            if merge_outs:  # overlay earlier rounds' packet verdicts
+                pkt_merged = np.zeros((n,), np.int32)
+                total_new = total_ev = total_sp = total_pr = 0
+                for sb, new, ev, sp, pr, acts in merge_outs:
+                    total_new += int(np.asarray(new).sum())
+                    total_ev += int(np.asarray(ev).sum())
+                    total_sp += int(np.asarray(sp).sum())
+                    total_pr += int(np.asarray(pr).sum())
+                    k = np.asarray(sb.keep)
+                    pkt_merged[np.asarray(sb.src)[k]] = np.asarray(acts)[k]
+                pos = np.asarray(last.src)[np.asarray(last.keep)]
+                pkt_merged[pos] = np.asarray(out.pkt_actions)[pos]
+                merged = out._replace(
+                    pkt_actions=jnp.asarray(pkt_merged),
+                    new_flows=jnp.int32(total_new + int(out.new_flows)),
+                    evicted=jnp.int32(total_ev + int(out.evicted)),
+                    spilled=jnp.int32(total_sp + int(out.spilled)),
+                    promoted=jnp.int32(total_pr + int(out.promoted)))
 
-        n_flows = self._feedback(
-            np.asarray(packets.tuple_hash), np.asarray(out.pkt_actions),
-            np.asarray(out.drained.mask), np.asarray(out.drained.tuple_id),
-            np.asarray(out.flow_actions), np.asarray(out.flow_cls))
+            n_flows = self._feedback(
+                np.asarray(packets.tuple_hash),
+                np.asarray(merged.pkt_actions),
+                np.asarray(merged.drained.mask),
+                np.asarray(merged.drained.tuple_id),
+                np.asarray(merged.flow_actions),
+                np.asarray(merged.flow_cls))
+            host_s = (enqueue_s + host_extra_s
+                      + (time.perf_counter() - t2))
+            self.stats.record_dispatch(
+                host_s + device_s, packets=n, dispatches=len(rounds),
+                flows=n_flows, new_flows=int(merged.new_flows),
+                evicted=int(merged.evicted), spilled=int(merged.spilled),
+                promoted=int(merged.promoted),
+                padded=self._padded_rows(rounds),
+                host_s=host_s, device_s=device_s)
+            return merged
 
-        self.stats.record_dispatch(
-            dt, packets=n, dispatches=len(rounds), flows=n_flows,
-            new_flows=int(out.new_flows), evicted=int(out.evicted),
-            spilled=int(out.spilled), promoted=int(out.promoted),
-            padded=self._padded_rows(rounds))
-        return out
+        return InflightDispatch(finish, steps=1, packets=n)
 
-    def step_many(self, batches: Sequence[ft.PacketBatch]) -> PipelineStepOutput:
-        """Exactly ``scan_len`` global microbatches as one device dispatch
-        (``lax.scan`` over the fused sharded step — lockstep lanes, so every
-        scanned step is one round), rule-table feedback after the chunk in
-        step order, like the single-lane chunked path."""
+    def _dispatch_chunk(self, batches: Sequence[ft.PacketBatch]
+                        ) -> InflightDispatch:
+        """Exactly ``scan_len`` global microbatches enqueued as one device
+        dispatch (``lax.scan`` over the fused sharded step — lockstep lanes,
+        so every scanned step is one round); partition hashing happens now,
+        feedback in the handle's ``wait``, in step order."""
         L = self.cfg.scan_len
         batches = list(batches)
         if len(batches) != L:
@@ -325,32 +344,50 @@ class ShardedOctopusPipeline(OctopusPipeline):
             # multi-round partitions cannot stack into one scanned dispatch
             # (overflow rounds would be dropped); the constructor pins
             # scan_len == 1 for this mode, so the chunk is a single step —
-            # route it through step(), which dispatches every round
-            out = self.step(batches[0])
-            return jax.tree_util.tree_map(lambda a: jnp.asarray(a)[None], out)
+            # route it through the per-step dispatch, which enqueues every
+            # round, and add the leading step axis on resolution
+            inner = self._dispatch_step(batches[0])
+
+            def finish(host_extra_s: float) -> PipelineStepOutput:
+                inner.add_host_time(host_extra_s)
+                out = inner.wait()  # records the dispatch in stats itself
+                return jax.tree_util.tree_map(
+                    lambda a: jnp.asarray(a)[None], out)
+
+            return InflightDispatch(finish, steps=1,
+                                    packets=self.cfg.batch_size)
         for b in batches:
             self._check_batch(b)
+        t0 = time.perf_counter()
         parts = [self._partition(b)[0] for b in batches]  # lockstep: 1 round
         shards, keep, src = (jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
                                                     *leaves)
                              for leaves in zip(*parts))
-
-        t0 = time.perf_counter()
         self.state, out = self._chunk_fn(self.state, shards, keep, src)
-        jax.block_until_ready((self.state, out))
-        dt = time.perf_counter() - t0
+        enqueue_s = time.perf_counter() - t0
+        n = L * self.cfg.batch_size
+        # parts holds one single-round partition PER STEP — padding is per
+        # step, not one multi-round step's worth
+        padded = sum(self._padded_rows([p]) for p in parts)
 
-        n_flows = self._chunk_feedback(batches, out)
-        self.stats.record_dispatch(
-            dt, packets=L * self.cfg.batch_size, steps=L, flows=n_flows,
-            new_flows=int(np.asarray(out.new_flows).sum()),
-            evicted=int(np.asarray(out.evicted).sum()),
-            spilled=int(np.asarray(out.spilled).sum()),
-            promoted=int(np.asarray(out.promoted).sum()),
-            # parts holds one single-round partition PER STEP — padding is
-            # per step, not one multi-round step's worth
-            padded=sum(self._padded_rows([p]) for p in parts))
-        return out
+        def finish(host_extra_s: float) -> PipelineStepOutput:
+            t1 = time.perf_counter()
+            jax.block_until_ready(out)
+            device_s = time.perf_counter() - t1
+            t2 = time.perf_counter()
+            n_flows = self._chunk_feedback(batches, out)
+            host_s = (enqueue_s + host_extra_s
+                      + (time.perf_counter() - t2))
+            self.stats.record_dispatch(
+                host_s + device_s, packets=n, steps=L, flows=n_flows,
+                new_flows=int(np.asarray(out.new_flows).sum()),
+                evicted=int(np.asarray(out.evicted).sum()),
+                spilled=int(np.asarray(out.spilled).sum()),
+                promoted=int(np.asarray(out.promoted).sum()),
+                padded=padded, host_s=host_s, device_s=device_s)
+            return out
+
+        return InflightDispatch(finish, steps=L, packets=n)
 
     def _zero_parts(self, bucket: Optional[int] = None) -> ShardedBatch:
         C = self.lane_batch if bucket is None else bucket
@@ -387,25 +424,29 @@ class ShardedOctopusPipeline(OctopusPipeline):
         if k.shape != (bucket,):
             raise ValueError(f"keep must have shape ({bucket},), got {k.shape}")
         n = int(k.sum())
-        sb = partition_batch(packets, self.num_shards, keep=k)[0]
-
         t0 = time.perf_counter()
+        sb = partition_batch(packets, self.num_shards, keep=k)[0]
         self.state, out = self._masked_fn(self.state, sb.shards, sb.keep,
                                           sb.src)
+        t1 = time.perf_counter()
         jax.block_until_ready((self.state, out))
-        dt = time.perf_counter() - t0
+        t2 = time.perf_counter()
         self._warm_buckets.add(bucket)
 
         n_flows = self._feedback(
             np.asarray(packets.tuple_hash)[k], np.asarray(out.pkt_actions)[k],
             np.asarray(out.drained.mask), np.asarray(out.drained.tuple_id),
             np.asarray(out.flow_actions), np.asarray(out.flow_cls))
+        t3 = time.perf_counter()
 
+        host_s, device_s = (t1 - t0) + (t3 - t2), t2 - t1
         self.stats.record_dispatch(
-            dt, packets=n, flows=n_flows, new_flows=int(out.new_flows),
+            host_s + device_s, packets=n, flows=n_flows,
+            new_flows=int(out.new_flows),
             evicted=int(out.evicted), spilled=int(out.spilled),
             promoted=int(out.promoted),
-            padded=self.num_shards * bucket - n)
+            padded=self.num_shards * bucket - n,
+            host_s=host_s, device_s=device_s)
         return out
 
     def warmup(self) -> None:

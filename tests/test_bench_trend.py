@@ -72,6 +72,23 @@ def test_skip_flag_reports_but_passes(tmp_path, capsys):
     assert "not failing" in capsys.readouterr().out
 
 
+def test_seed_baseline_reports_but_never_fails(tmp_path, capsys):
+    """The committed bootstrap point (label "seed") was measured on another
+    machine — a drop against it reports but exits zero.  The gate arms as
+    soon as CI appends its own first point."""
+    traj = str(tmp_path / "traj")
+    run1 = _write_run(tmp_path, "r1.json", _tracked(1000))
+    bench_trend.main(["append", "--trajectory", traj, "--run", run1,
+                      "--label", "seed"])
+    run2 = _write_run(tmp_path, "r2.json", _tracked(500))  # -50% vs seed
+    assert bench_trend.main(["check", "--trajectory", traj, "--run", run2]) == 0
+    assert "report-only" in capsys.readouterr().out
+    bench_trend.main(["append", "--trajectory", traj, "--run", run2,
+                      "--label", "ci-1"])
+    run3 = _write_run(tmp_path, "r3.json", _tracked(300))  # -40% vs ci-1
+    assert bench_trend.main(["check", "--trajectory", traj, "--run", run3]) == 1
+
+
 def test_drop_within_threshold_passes(tmp_path):
     traj = str(tmp_path / "traj")
     run1 = _write_run(tmp_path, "r1.json", _tracked(1000))

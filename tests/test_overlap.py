@@ -1,0 +1,227 @@
+"""Overlapped (deferred-sync) dispatch: differential proof that
+``PipelineConfig.overlap=True`` is bit-identical to the eager loop —
+tracker state, drained flows, rule table, stats packet counts — for
+single-lane and sharded pipelines, scan_len 1 and >1, partial final
+chunks and multi-round (lane_batch < batch_size) sharded steps; plus the
+InflightDispatch handle contract, the host/device stats split, and the
+order/exception guarantees of the traffic prefetcher."""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data.traffic import TrafficConfig, TrafficGenerator, prefetch
+from repro.models.paper_models import init_paper_model
+from repro.serving import (
+    InflightDispatch,
+    OctopusPipeline,
+    PipelineConfig,
+    ShardedOctopusPipeline,
+)
+
+
+@pytest.fixture(scope="module")
+def mlp_params():
+    return init_paper_model("mlp", jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def cnn_params():
+    return init_paper_model("cnn", jax.random.PRNGKey(1))
+
+
+def make_pipeline(mlp_params, cnn_params, *, overlap, scan_len=1,
+                  num_shards=0, lane_batch=None, batch_size=16):
+    cfg = PipelineConfig(batch_size=batch_size, max_ready=8, table_size=128,
+                         scan_len=scan_len, overlap=overlap)
+    if num_shards:
+        return ShardedOctopusPipeline(mlp_params, cnn_params, cfg,
+                                      num_shards=num_shards,
+                                      lane_batch=lane_batch)
+    return OctopusPipeline(mlp_params, cnn_params, cfg)
+
+
+def gen(batch_size=16, seed=7):
+    return TrafficGenerator(TrafficConfig(batch_size=batch_size,
+                                          active_flows=48, table_size=128,
+                                          seed=seed))
+
+
+def assert_trees_equal(a, b, msg=""):
+    leaves_a = jax.tree_util.tree_leaves(a)
+    leaves_b = jax.tree_util.tree_leaves(b)
+    assert len(leaves_a) == len(leaves_b)
+    for x, y in zip(leaves_a, leaves_b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=msg)
+
+
+def assert_runs_identical(eager, ovl, steps):
+    """Drive both pipelines over the same seeded stream and assert the full
+    differential contract: residual tracker state, rule table (verdicts AND
+    generation order), and every stats count."""
+    se = eager.run(gen(eager.cfg.batch_size), steps=steps)
+    so = ovl.run(gen(ovl.cfg.batch_size), steps=steps)
+    assert_trees_equal(eager.state, ovl.state, "tracker state")
+    assert eager.rules.rules == ovl.rules.rules
+    assert eager.rules.generation == ovl.rules.generation
+    for f in ("packets", "steps", "flows", "new_flows", "evicted",
+              "spilled", "promoted", "dispatches", "padded"):
+        assert getattr(se, f) == getattr(so, f), f
+    assert so.packets == steps * ovl.cfg.batch_size
+
+
+# ------------------------------------------------------------- single lane
+
+@pytest.mark.parametrize("scan_len,steps", [
+    (1, 9),  # per-step dispatch
+    (3, 9),  # chunked, steps a multiple of scan_len
+    (3, 8),  # chunked + PARTIAL final chunk (per-step fallback, overlapped)
+])
+def test_overlap_bit_identical_single_lane(mlp_params, cnn_params,
+                                           scan_len, steps):
+    eager = make_pipeline(mlp_params, cnn_params, overlap=False,
+                          scan_len=scan_len)
+    ovl = make_pipeline(mlp_params, cnn_params, overlap=True,
+                        scan_len=scan_len)
+    eager.warmup()
+    ovl.warmup()
+    assert_runs_identical(eager, ovl, steps)
+
+
+def test_overlap_stepwise_outputs_identical(mlp_params, cnn_params):
+    """Every per-step output — packet verdicts, drained flow rows + masks,
+    flow decisions, churn counters — matches the eager loop when handles
+    are waited in dispatch order with depth-1 lag (what run() does)."""
+    eager = make_pipeline(mlp_params, cnn_params, overlap=False)
+    ovl = make_pipeline(mlp_params, cnn_params, overlap=True)
+    eager.warmup()
+    ovl.warmup()
+    batches = list(gen().batches(6))
+    eager_outs = [eager.step(b) for b in batches]
+    ovl_outs = []
+    pending = None
+    for b in batches:
+        h = ovl.step(b)
+        assert isinstance(h, InflightDispatch)
+        if pending is not None:
+            ovl_outs.append(pending.wait())
+        pending = h
+    ovl_outs.append(pending.wait())
+    for eo, oo in zip(eager_outs, ovl_outs):
+        assert_trees_equal(eo, oo, "step output")
+    assert_trees_equal(eager.state, ovl.state, "tracker state")
+    assert eager.rules.rules == ovl.rules.rules
+
+
+# ----------------------------------------------------------------- sharded
+
+@pytest.mark.parametrize("scan_len,steps,lane_batch", [
+    (1, 7, None),  # lockstep single-round lanes
+    (3, 8, None),  # chunked lanes + partial final chunk
+    (1, 6, 8),     # multi-round: overflow merges enqueue without readbacks
+])
+def test_overlap_bit_identical_sharded(mlp_params, cnn_params, scan_len,
+                                       steps, lane_batch):
+    eager = make_pipeline(mlp_params, cnn_params, overlap=False,
+                          scan_len=scan_len, num_shards=2,
+                          lane_batch=lane_batch)
+    ovl = make_pipeline(mlp_params, cnn_params, overlap=True,
+                        scan_len=scan_len, num_shards=2,
+                        lane_batch=lane_batch)
+    eager.warmup()
+    ovl.warmup()
+    assert_runs_identical(eager, ovl, steps)
+
+
+# ------------------------------------------------------------------ handle
+
+def test_handle_contract(mlp_params, cnn_params):
+    """step() under overlap returns an InflightDispatch; wait() is
+    idempotent, records the dispatch exactly once, and the rule-table
+    feedback is DEFERRED until wait (the lag the bit-identity argument
+    rests on: the device step never reads the rule table)."""
+    p = make_pipeline(mlp_params, cnn_params, overlap=True)
+    p.warmup()
+    g = gen()
+    gen_before = p.rules.generation
+    h = p.step(g.next_batch())
+    assert isinstance(h, InflightDispatch)
+    assert not h.done
+    assert h.steps == 1 and h.packets == p.cfg.batch_size
+    assert p.rules.generation == gen_before  # feedback not yet applied
+    assert p.stats.dispatches == 0  # nothing recorded while in flight
+    out1 = h.wait()
+    out2 = h.wait()
+    assert out1 is out2 and h.done
+    assert p.stats.dispatches == 1 and p.stats.steps == 1
+    assert p.rules.generation > gen_before
+
+
+def test_eager_mode_returns_outputs_not_handles(mlp_params, cnn_params):
+    p = make_pipeline(mlp_params, cnn_params, overlap=False, scan_len=2)
+    p.warmup()
+    g = gen()
+    out = p.step_many([g.next_batch(), g.next_batch()])
+    assert not isinstance(out, InflightDispatch)
+    assert np.asarray(out.pkt_actions).shape == (2, p.cfg.batch_size)
+
+
+def test_stats_host_device_split(mlp_params, cnn_params):
+    """total_s decomposes exactly into host_s + device_s, in both modes,
+    and the per-dispatch means are finite once something ran."""
+    for overlap in (False, True):
+        p = make_pipeline(mlp_params, cnn_params, overlap=overlap)
+        p.warmup()
+        s = p.run(gen(), steps=5)
+        assert s.total_s == pytest.approx(s.host_s + s.device_s)
+        assert s.host_s > 0 and s.device_s >= 0
+        assert math.isfinite(s.host_us) and math.isfinite(s.device_us)
+    idle = make_pipeline(mlp_params, cnn_params, overlap=True).stats
+    assert math.isnan(idle.host_us) and math.isnan(idle.device_us)
+
+
+# ---------------------------------------------------------------- prefetch
+
+def test_prefetch_preserves_order_exactly():
+    src = list(gen().batches(12))
+    out = list(prefetch(iter(src), depth=3))
+    assert len(out) == len(src)
+    for a, b in zip(src, out):
+        assert_trees_equal(a, b, "prefetched batch")
+
+
+def test_prefetch_forwards_producer_exception():
+    def boom():
+        yield 1
+        yield 2
+        raise RuntimeError("producer died")
+
+    it = prefetch(boom(), depth=2)
+    assert next(it) == 1 and next(it) == 2
+    with pytest.raises(RuntimeError, match="producer died"):
+        next(it)
+
+
+def test_prefetch_rejects_bad_depth():
+    with pytest.raises(ValueError, match="depth"):
+        next(prefetch(iter([]), depth=0))
+
+
+def test_prefetch_passes_through_tuples():
+    # tagged merge_streams yields (client_id, batch) tuples — the end
+    # sentinel must not be confused with user 2-tuples
+    src = [(0, "a"), (1, "b")]
+    assert list(prefetch(iter(src), depth=1)) == src
+
+
+def test_prefetched_run_is_bit_identical(mlp_params, cnn_params):
+    a = make_pipeline(mlp_params, cnn_params, overlap=True)
+    b = make_pipeline(mlp_params, cnn_params, overlap=True)
+    a.warmup()
+    b.warmup()
+    a.run(gen(), steps=8)
+    b.run(prefetch(gen().batches(8), depth=2), steps=8)
+    assert_trees_equal(a.state, b.state, "tracker state")
+    assert a.rules.rules == b.rules.rules

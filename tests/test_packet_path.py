@@ -175,3 +175,43 @@ def test_wrappers_share_engine_state(mlp_params, cnn_params):
     f = FlowPath(cnn_params, model="cnn", config=cfg)
     assert f.model == "cnn" and f.runtime.policy == "arype_only"
     assert len(f.route_plan(flows=10)) == 5
+
+
+# --------------------------------------------------- host/device time split
+
+def test_path_stats_host_device_split_accumulates():
+    s = PathStats()
+    assert math.isnan(s.host_us) and math.isnan(s.device_us)
+    s.record(1.0, 10, host_s=0.25, device_s=0.75)
+    s.record(1.0, 10, host_s=0.5, device_s=0.5)
+    assert s.host_s == pytest.approx(0.75) and s.device_s == pytest.approx(1.25)
+    assert s.host_us == pytest.approx(0.375e6)
+    assert s.device_us == pytest.approx(0.625e6)
+    # callers that don't measure the split leave it 0 — totals still correct
+    s2 = PathStats()
+    s2.record(2.0, 4)
+    assert s2.latency_us == pytest.approx(2e6)
+    assert s2.host_s == 0.0 and s2.device_s == 0.0
+
+
+def test_path_process_records_split(mlp_params):
+    p = PacketPath(mlp_params)
+    p.warmup(batch=8)
+    p.process(make_packets(8))
+    s = p.stats
+    assert s.calls == 1
+    assert s.total_s == pytest.approx(s.host_s + s.device_s)
+    assert math.isfinite(s.host_us) and math.isfinite(s.device_us)
+
+
+def test_pipeline_stats_host_device_split():
+    from repro.serving import PipelineStats
+
+    s = PipelineStats()
+    assert math.isnan(s.host_us) and math.isnan(s.device_us)
+    s.record_dispatch(1.0, packets=32, host_s=0.6, device_s=0.4)
+    s.record_dispatch(1.0, packets=32, host_s=0.2, device_s=0.8)
+    assert s.host_s == pytest.approx(0.8) and s.device_s == pytest.approx(1.2)
+    assert s.host_us == pytest.approx(0.4e6)
+    assert s.device_us == pytest.approx(0.6e6)
+    assert s.total_s == pytest.approx(s.host_s + s.device_s)

@@ -382,3 +382,173 @@ async def test_feature_only_heads_serve_through_buckets(mlp_params, cnn_params):
     for o in outs:
         np.testing.assert_array_equal(o.pkt_actions,
                                       np.zeros(o.pkt_actions.shape, np.int32))
+
+
+# ------------------------------------------------------------ failure path
+
+class _FailOnce:
+    """Injected failing step: raises on the first call, then delegates —
+    the regression harness for the dispatcher's failure path."""
+
+    def __init__(self, inner, exc):
+        self.inner = inner
+        self.exc = exc
+        self.calls = 0
+
+    def __call__(self, batch, keep):
+        self.calls += 1
+        if self.calls == 1:
+            raise self.exc
+        return self.inner(batch, keep)
+
+
+@async_test
+async def test_failing_dispatch_resolves_futures_and_service_survives(
+        mlp_params, cnn_params):
+    """Regression: a raising step_masked used to leave every coalesced
+    future unresolved (submit hung forever), leak the pooled staging buffer
+    and keep _depth inflated, wedging admission control.  Now every affected
+    client gets the error, the buffer returns to the pool, the depth drains,
+    and the NEXT submit is served normally."""
+    pipe = make_pipeline(mlp_params, cnn_params)
+    svc = OctopusService(pipe, ServiceConfig(buckets=(8, 16, 32)))
+    async with svc:
+        boom = RuntimeError("injected device fault")
+        pipe.step_masked = _FailOnce(pipe.step_masked, boom)
+        outcomes = await asyncio.gather(
+            svc.submit(gen_of(5, seed=1).next_batch(), client_id=0),
+            svc.submit(gen_of(6, seed=2).next_batch(), client_id=1),
+            return_exceptions=True)
+        # both coalesced clients see the SAME injected error, not a hang
+        assert all(o is boom for o in outcomes)
+        assert svc.queue_depth == 0  # depth restored — admission not wedged
+        assert svc.stats.failed_dispatches == 1
+        assert svc.stats.failed == 11
+        assert svc.stats.served == 0
+
+        # the service keeps serving: next submit succeeds and — landing in
+        # the same 16 bucket — reuses the staging buffer the failed dispatch
+        # released (no pool leak)
+        misses_before = svc.stats.pool_misses
+        res = await svc.submit(gen_of(11, seed=3).next_batch(), client_id=0)
+        assert isinstance(res, ServeResult)
+        assert res.pkt_actions.shape == (11,)
+        assert svc.stats.pool_misses == misses_before
+        assert svc.stats.pool_hits >= 1
+    assert svc.stats.served == 11
+
+
+@async_test
+async def test_failing_dispatch_unblocks_waiting_submitters(mlp_params,
+                                                            cnn_params):
+    """block-admission waiters must wake when a FAILING dispatch frees the
+    queue — the _space event is re-set on the error path too."""
+    pipe = make_pipeline(mlp_params, cnn_params)
+    svc = OctopusService(pipe, ServiceConfig(
+        buckets=(8,), depth_budget=8, admission="block"))
+    async with svc:
+        pipe.step_masked = _FailOnce(pipe.step_masked, RuntimeError("boom"))
+        outcomes = await asyncio.gather(
+            svc.submit(gen_of(8, seed=1).next_batch(), client_id=0),
+            svc.submit(gen_of(8, seed=2).next_batch(), client_id=1),
+            return_exceptions=True)
+        # first fails, second (which had to wait for space) is served
+        assert isinstance(outcomes[0], RuntimeError)
+        assert isinstance(outcomes[1], ServeResult)
+        assert svc.queue_depth == 0
+
+
+# ---------------------------------------------------------- wall-s freshness
+
+@async_test
+async def test_wall_clock_snapshots_at_read_time(mlp_params, cnn_params):
+    """Regression: wall_s was only refreshed inside the dispatcher, so
+    pkt_per_s read after an idle tail used a stale clock and overstated
+    throughput.  It must tick between reads while the service runs, and
+    freeze at stop()."""
+    pipe = make_pipeline(mlp_params, cnn_params)
+    svc = OctopusService(pipe, ServiceConfig(buckets=(8,)))
+    async with svc:
+        await svc.submit(gen_of(8, seed=1).next_batch())
+        w1 = svc.stats.wall_s
+        r1 = svc.stats.pkt_per_s
+        await asyncio.sleep(0.05)  # idle tail — no dispatches
+        w2 = svc.stats.wall_s
+        assert w2 >= w1 + 0.04  # the clock kept ticking
+        assert svc.stats.pkt_per_s < r1  # throughput decays over idle time
+    frozen = svc.stats.wall_s  # stop() freezes the clock
+    await asyncio.sleep(0.02)
+    assert svc.stats.wall_s == frozen
+
+
+# ------------------------------------------------------- real dispatch bucket
+
+@async_test
+async def test_result_bucket_is_the_actual_dispatch_bucket(mlp_params,
+                                                           cnn_params):
+    """Regression: ServeResult.bucket was recomputed from the request's own
+    chunk size, not the coalesced dispatch it actually rode in.  Two
+    requests coalescing into one 16-bucket must BOTH report 16."""
+    pipe = make_pipeline(mlp_params, cnn_params)
+    svc = OctopusService(pipe, ServiceConfig(buckets=(8, 16, 32)))
+    async with svc:
+        results = await asyncio.gather(
+            svc.submit(gen_of(5, seed=1).next_batch(), client_id=0),
+            svc.submit(gen_of(6, seed=2).next_batch(), client_id=1))
+        assert svc.stats.dispatches == 1  # they really coalesced
+        for res in results:
+            assert res.bucket == 16  # 5 + 6 = 11 -> the 16 bucket
+            assert res.buckets == (16,)
+
+
+@async_test
+async def test_oversize_split_reports_per_chunk_buckets(mlp_params,
+                                                        cnn_params):
+    """A submit larger than the top bucket splits into chunks; the result
+    reports every chunk's actual bucket and the max as `bucket` (the old
+    code reported the LAST chunk's size class — 8 for a 70-packet submit)."""
+    pipe = make_pipeline(mlp_params, cnn_params)
+    svc = OctopusService(pipe, ServiceConfig(buckets=(8, 16, 32)))
+    async with svc:
+        res = await svc.submit(gen_of(70, seed=1).next_batch())
+        assert res.pkt_actions.shape == (70,)
+        assert res.buckets == (32, 32, 8)  # 70 = 32 + 32 + 6
+        assert res.bucket == 32
+
+
+# ----------------------------------------------------- offload on/off twins
+
+@async_test
+async def test_inline_dispatch_mode_serves_identically(mlp_params,
+                                                       cnn_params):
+    """offload=False keeps the old loop-inline dispatch (the bench twin);
+    the serving surface — verdicts, buckets, failure path — is identical."""
+    pipe = make_pipeline(mlp_params, cnn_params)
+    svc = OctopusService(pipe, ServiceConfig(buckets=(8, 16), offload=False))
+    async with svc:
+        assert svc._executor is None
+        res = await svc.submit(gen_of(11, seed=1).next_batch())
+        assert isinstance(res, ServeResult)
+        assert res.pkt_actions.shape == (11,) and res.bucket == 16
+        pipe.step_masked = _FailOnce(pipe.step_masked, RuntimeError("boom"))
+        with pytest.raises(RuntimeError, match="boom"):
+            await svc.submit(gen_of(4, seed=2).next_batch())
+        res = await svc.submit(gen_of(3, seed=3).next_batch())
+        assert res.pkt_actions.shape == (3,)
+    assert svc.stats.failed_dispatches == 1
+    assert svc.stats.host_s > 0 and svc.stats.device_s > 0
+
+
+@async_test
+async def test_offload_dispatch_splits_host_device_time(mlp_params,
+                                                        cnn_params):
+    pipe = make_pipeline(mlp_params, cnn_params)
+    svc = OctopusService(pipe, ServiceConfig(buckets=(8, 16)))
+    async with svc:
+        assert math.isnan(svc.stats.host_us)  # idle convention
+        for i in range(3):
+            await svc.submit(gen_of(8, seed=i).next_batch())
+    s = svc.stats
+    assert s.dispatches == 3
+    assert s.host_s > 0 and s.device_s > 0
+    assert math.isfinite(s.host_us) and math.isfinite(s.device_us)

@@ -15,6 +15,12 @@ small enough to cache across hundreds of PRs.
 ``[bench-skip]`` commit-message tag) records the comparison but always exits
 zero.  Int8 twin rows are deliberately untracked: their trajectory is
 informational until a backend with a native int8 MXU path runs the job.
+
+An empty trajectory is bootstrapped from the committed seed point in
+``benchmarks/trajectory/`` (CI copies it in when the cache restore comes
+back empty).  A baseline labeled ``seed`` is report-only — it was measured
+on whatever machine generated it, so the absolute pkt/s is not comparable
+to the CI runner's; the gate arms at the first CI-appended point.
 """
 from __future__ import annotations
 
@@ -28,12 +34,14 @@ import time
 SCHEMA_VERSION = 1
 
 # Gated rows: the single-lane/sharded segmented pipeline curve, the
-# 4-client service row, and the hierarchical (hot+cold, ~1.3e5-flow
-# capacity) flow-table row — the repo's headline pkt/s numbers.
+# 4-client service row, the overlapped-dispatch row, and the hierarchical
+# (hot+cold, ~1.3e5-flow capacity) flow-table row — the repo's headline
+# pkt/s numbers.
 TRACKED = (
     "pipeline_cnn_lane128_segmented_s1",
     "pipeline_cnn_lane128_segmented_s2",
     "pipeline_cnn_lane128_segmented_s4",
+    "pipeline_cnn_b128_segmented_x8_ovl1",
     "service_cnn_c4_b16",
     "pipeline_cnn_b128_cold131072",
     "scenario_topk_b128_cold4096",
@@ -119,6 +127,11 @@ def cmd_check(args) -> int:
         print("[trend] no prior trajectory point; nothing to gate against")
         return 0
     prev_idx, prev = points[-1]
+    # The committed seed point (label "seed") was measured on whatever
+    # machine bootstrapped the trajectory — cross-machine CPU deltas can
+    # exceed any sane threshold, so a seed baseline reports but never
+    # fails.  The gate arms once CI appends its own first point.
+    seed_baseline = prev.get("label") == "seed"
     regressions = []
     for name in TRACKED:
         now = (current.get(name) or {}).get("pkt_per_s")
@@ -136,6 +149,11 @@ def cmd_check(args) -> int:
             print(f"[trend] {len(regressions)} regression(s) over the "
                   f"{100 * args.threshold:.0f}% threshold — [bench-skip] "
                   f"active, not failing")
+            return 0
+        if seed_baseline:
+            print(f"[trend] {len(regressions)} regression(s) vs the committed "
+                  f"seed point — different machine, report-only; the gate "
+                  f"arms at the next CI-appended point")
             return 0
         print(f"[trend] FAIL: {len(regressions)} tracked row(s) dropped more "
               f"than {100 * args.threshold:.0f}% (commit with [bench-skip] "
